@@ -1,0 +1,43 @@
+"""Fig. 6 / App. G: reconstruction error vs parameter-saved ratio across
+(rank, clusters) on a single module -> the §6.5 selection procedure."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import (cluster_jd, clustered_reconstruction_errors,
+                        jd_full_eig, normalize_bank, parameter_counts,
+                        reconstruction_errors)
+from repro.core.recommend import recommend
+from repro.core.collection import LoRABank
+import jax.numpy as jnp
+
+from .common import csv_row, structured_bank, timed
+
+
+def main(quick: bool = True):
+    rows = []
+    n, r_l, d = (128, 8, 256) if quick else (512, 16, 1024)
+    A, B = structured_bank(jax.random.PRNGKey(1), n, r_l, d, n_families=8)
+    A, B, _ = normalize_bank(A, B)
+    for k, rank in [(1, 16), (2, 16), (4, 16), (8, 16), (1, 64)]:
+        if k == 1:
+            res, dt = timed(jd_full_eig, A, B, rank, iters=12)
+            loss = float(reconstruction_errors(A, B, res)["loss"])
+        else:
+            res, dt = timed(cluster_jd, A, B, rank, k, jd_iters=8,
+                            outer_iters=3)
+            loss = float(clustered_reconstruction_errors(A, B, res)["loss"])
+        pc = parameter_counts(d, d, n, rank, k, lora_rank=r_l)
+        rows.append(csv_row(f"select_k{k}_r{rank}", dt * 1e6,
+                            f"loss={loss:.4f};saved={pc['saved_ratio']:.3f}"))
+    # §6.5 procedure end-to-end
+    bank = LoRABank(A=A, B=B, ranks=jnp.full((n,), r_l, jnp.int32))
+    rec, dt = timed(lambda: recommend({"mid.q": bank}, rank=16,
+                                      max_clusters=16, iters=8))
+    rows.append(csv_row("recommend_6_5", dt * 1e6,
+                        f"k={rec.n_clusters};losses={rec.probe_losses}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main(quick=True)))

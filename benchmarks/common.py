@@ -1,0 +1,46 @@
+"""Shared benchmark utilities: synthetic structured LoRA collections + CSV."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def structured_bank(key, n: int, r_l: int, d: int, n_families: int = 4,
+                    noise: float = 0.3):
+    """Synthetic collection with shared per-family structure (App. H.11:
+    trained LoRAs share components; random ones don't)."""
+    keys = jax.random.split(key, 2 * n_families + 2)
+    fam_A = [jax.random.normal(keys[2 * i], (r_l, d)) for i in range(n_families)]
+    fam_B = [jax.random.normal(keys[2 * i + 1], (d, r_l))
+             for i in range(n_families)]
+    ka, kb = keys[-2:]
+    As, Bs = [], []
+    for i in range(n):
+        f = i % n_families
+        As.append(fam_A[f] + noise * jax.random.normal(
+            jax.random.fold_in(ka, i), (r_l, d)))
+        Bs.append(fam_B[f] + noise * jax.random.normal(
+            jax.random.fold_in(kb, i), (d, r_l)))
+    return jnp.stack(As), jnp.stack(Bs)
+
+
+def random_bank(key, n: int, r_l: int, d: int):
+    ka, kb = jax.random.split(key)
+    return (jax.random.normal(ka, (n, r_l, d)),
+            jax.random.normal(kb, (n, d, r_l)))
+
+
+def timed(fn, *args, reps: int = 1, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(jax.tree.leaves(out)[0]) if jax.tree.leaves(out) \
+        else None
+    return out, (time.perf_counter() - t0) / reps
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,41 @@
+"""Kernel-level microbench: SGMV / JD-apply arithmetic-intensity model +
+interpret-mode sanity timing (CPU has no MXU; see EXPERIMENTS.md §Perf for
+the dry-run-derived roofline placement of these ops)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as R
+from .common import csv_row, timed
+
+
+def main(quick: bool = True):
+    rows = []
+    T, d, n, r = 256, 1024, 32, 16
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (T, d), jnp.bfloat16)
+    A = (jax.random.normal(ks[1], (n, r, d)) * 0.02).astype(jnp.bfloat16)
+    Bm = (jax.random.normal(ks[2], (n, d, r)) * 0.02).astype(jnp.bfloat16)
+    ids = jax.random.randint(ks[3], (T,), 0, n)
+
+    _, t = timed(jax.jit(R.lora_apply_ref), x, A, Bm, ids, reps=3)
+    flops = 2 * T * r * 2 * d
+    # uncompressed: every token streams its own adapter block
+    bytes_lora = T * r * 2 * d * 2
+    rows.append(csv_row("sgmv_pair", t * 1e6,
+                        f"flops={flops:.2e};ai={flops/bytes_lora:.2f}"))
+    U = (jax.random.normal(ks[1], (1, d, r)) * 0.02).astype(jnp.bfloat16)
+    V = (jax.random.normal(ks[2], (1, d, r)) * 0.02).astype(jnp.bfloat16)
+    sig = (jax.random.normal(ks[3], (n, r, r)) * 0.1).astype(jnp.bfloat16)
+    cl = jnp.zeros((n,), jnp.int32)
+    _, t = timed(jax.jit(R.jd_apply_ref), x, U, V, sig, cl, ids, reps=3)
+    bytes_jd = 2 * d * r * 2 + T * r * r * 2
+    rows.append(csv_row("jd_apply", t * 1e6,
+                        f"flops={flops:.2e};ai={flops/bytes_jd:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main(quick=True)))

@@ -1,0 +1,48 @@
+"""Fig. 5 analogue: adapter memory footprint, host->device transfer model,
+and forward-pass latency of uncompressed vs JD-compressed application."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as R
+from repro.serving.adapter_cache import DMAModel
+from .common import csv_row, timed
+
+
+def main(quick: bool = True):
+    rows = []
+    T, d, n, r = (256, 1024, 64, 16) if quick else (1024, 4096, 256, 16)
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (T, d), jnp.float32)
+    A = jax.random.normal(ks[1], (n, r, d)) * 0.02
+    B = jax.random.normal(ks[2], (n, d, r)) * 0.02
+    U = jax.random.normal(ks[3], (1, d, r)) * 0.02
+    V = jax.random.normal(ks[4], (1, d, r)) * 0.02
+    sig = jax.random.normal(ks[5], (n, r, r)) * 0.1
+    ids = jax.random.randint(ks[0], (T,), 0, n)
+    cluster_of = jnp.zeros((n,), jnp.int32)
+
+    lora_apply = jax.jit(R.lora_apply_ref)
+    jd_apply = jax.jit(R.jd_apply_ref)
+    _, t_lora = timed(lora_apply, x, A, B, ids, reps=5)
+    _, t_jd = timed(jd_apply, x, U, V, sig, cluster_of, ids, reps=5)
+
+    bytes_lora = n * r * 2 * d * 4
+    bytes_jd = 2 * d * r * 4 + n * r * r * 4
+    dma = DMAModel()
+    t_xfer_lora = bytes_lora / dma.bandwidth
+    t_xfer_jd = bytes_jd / dma.bandwidth
+    rows.append(csv_row("lora_fwd", t_lora * 1e6,
+                        f"mem_MB={bytes_lora/1e6:.2f};xfer_ms={t_xfer_lora*1e3:.3f}"))
+    rows.append(csv_row("jd_fwd", t_jd * 1e6,
+                        f"mem_MB={bytes_jd/1e6:.2f};xfer_ms={t_xfer_jd*1e3:.3f}"))
+    rows.append(csv_row("jd_vs_lora", 0.0,
+                        f"mem_ratio={bytes_lora/bytes_jd:.1f};"
+                        f"fwd_latency_ratio={t_lora/max(t_jd,1e-9):.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main(quick=True)))

@@ -1,0 +1,36 @@
+"""Deliverable (g): per-(arch x shape x mesh) roofline table from the
+dry-run artifacts (results/dryrun/*.json)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import csv_row
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def main(quick: bool = True):
+    rows = []
+    if not RESULTS.exists():
+        return [csv_row("roofline_missing", 0.0, "run repro.launch.dryrun")]
+    for p in sorted(RESULTS.glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("skipped"):
+            rows.append(csv_row(p.stem, 0.0, f"SKIP:{d['reason'][:40]}"))
+            continue
+        if not d.get("ok"):
+            rows.append(csv_row(p.stem, 0.0, f"FAIL:{d.get('error','')[:40]}"))
+            continue
+        r = d["roofline"]
+        rows.append(csv_row(
+            p.stem, d.get("compile_s", 0) * 1e6,
+            f"bneck={r['bottleneck']};tc={r['t_compute_s']:.3f};"
+            f"tm={r['t_memory_s']:.3f};tx={r['t_collective_s']:.3f};"
+            f"useful={r['useful_flops_ratio']:.3f};"
+            f"frac={r['roofline_fraction']:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main(quick=True)))

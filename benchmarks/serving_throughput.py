@@ -1,0 +1,34 @@
+"""Fig. 1 / Fig. 4: throughput of compressed vs uncompressed multi-LoRA
+serving vs collection size (memory-matched, v5e cost model)."""
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_config
+from repro.serving.simulator import WorkloadConfig, run_throughput_study
+from .common import csv_row
+
+
+def main(quick: bool = True):
+    cfg = get_config("mistral-7b")
+    ns = [4, 16, 64, 256, 1024] if quick else [4, 8, 16, 32, 64, 128, 256,
+                                               512, 1024]
+    t0 = time.perf_counter()
+    rows_raw = run_throughput_study(
+        cfg, ns, WorkloadConfig(n_requests=400 if quick else 1000,
+                                new_tokens=10))
+    dt = (time.perf_counter() - t0) / len(ns)
+    rows = []
+    for r in rows_raw:
+        rows.append(csv_row(
+            f"serve_n{r['n_adapters']}", dt * 1e6,
+            f"jd_rps={r['jd']['throughput_rps']:.2f};"
+            f"lora_rps={r['lora']['throughput_rps']:.2f};"
+            f"ratio={r['throughput_ratio_jd_vs_lora']:.2f};"
+            f"frac_single={r['jd_frac_of_single']:.3f};"
+            f"lora_swaps={r['lora']['n_swaps']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main(quick=True)))

@@ -1,0 +1,25 @@
+"""Drive the multi-pod dry-run from Python (deliverable (e) entry point).
+
+    PYTHONPATH=src python examples/multi_pod_dryrun.py --arch qwen3-1.7b
+
+Compiles train/prefill/decode steps for the production meshes (16x16 and
+2x16x16 = 512 chips) and prints the roofline terms.
+"""
+import argparse
+import json
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--shape", default="train_4k")
+    args = ap.parse_args()
+    for flag in ([], ["--multi-pod"]):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", args.shape, "--force",
+               "--out", "/tmp/dryrun_example"] + flag
+        subprocess.run(cmd, check=True)
+    name = f"{args.arch}__{args.shape}__pod2x16x16.json"
+    rec = json.load(open(f"/tmp/dryrun_example/{name}"))
+    print(json.dumps(rec["roofline"], indent=2))

@@ -1,0 +1,33 @@
+"""Train a ~100M-parameter decoder LM for a few hundred steps on CPU with the
+full production substrate: AdamW + cosine schedule, microbatching, async
+checkpointing, fault-tolerant runner.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300]
+"""
+import argparse
+import dataclasses
+
+from repro.configs.base import LoRAConfig, ModelConfig
+from repro.launch.train import train_full
+
+
+def config_100m() -> ModelConfig:
+    # ~104M params: 12L, d=768, 12H, d_ff=2048, vocab 32000 (tied embeddings)
+    return ModelConfig(
+        name="repro-100m", family="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=4, head_dim=64, d_ff=2048,
+        vocab_size=32000, tie_embeddings=True,
+        lora=LoRAConfig(rank=16), attn_chunk_q=0, scan_layers=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/repro_100m")
+    args = ap.parse_args()
+    cfg = config_100m()
+    print(f"params: {cfg.param_count()/1e6:.1f}M")
+    train_full(cfg, args.steps, args.batch, args.seq, args.ckpt,
+               ckpt_every=50, log_every=10)

@@ -1,0 +1,128 @@
+"""Generate EXPERIMENTS.md from results/dryrun + results/perf + benchmark runs."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DRY = ROOT / "results" / "dryrun"
+PERF = ROOT / "results" / "perf"
+
+
+def fmt_cell(d):
+    r = d["roofline"]
+    return (f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+            f"{r['t_compute_s']:.4f} | {r['t_memory_s']:.4f} | "
+            f"{r['t_collective_s']:.4f} | {r['bottleneck']} | "
+            f"{r['useful_flops_ratio']:.3f} | {r['roofline_fraction']:.4f} | "
+            f"{d['memory']['temp_bytes']/1e9:.1f} |")
+
+
+def main():
+    recs = sorted((json.loads(p.read_text()) for p in DRY.glob("*.json")),
+                  key=lambda d: (d["arch"], d["shape"], d["mesh"]))
+    ok = [d for d in recs if d.get("ok") and not d.get("skipped")]
+    skips = [d for d in recs if d.get("skipped")]
+    fails = [d for d in recs if not d.get("ok")]
+
+    perf = sorted((json.loads(p.read_text()) for p in PERF.glob("*.json")),
+                  key=lambda d: (d["arch"], d["shape"], d.get("variant", "")))
+
+    # benchmark CSV (quick mode)
+    bench = subprocess.run(
+        [sys.executable, "-m", "benchmarks.compression_quality"],
+        capture_output=True, text=True, cwd=ROOT,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+
+    out = []
+    w = out.append
+    w("# EXPERIMENTS — dry-run, roofline, and perf iterations\n")
+    w("Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link "
+      "ICI. Meshes: 16x16 (data, model) single pod; 2x16x16 (pod, data, "
+      "model) = 512 chips multi-pod.\n")
+
+    # ----- §Dry-run -----
+    w("## §Dry-run\n")
+    w(f"**{len(ok)} cells compiled OK**, {len(skips)} documented skips, "
+      f"{len(fails)} failures, across every (architecture x shape x mesh) "
+      "combination. Each cell lowers + compiles the full step "
+      "(train: fwd+bwd+AdamW w/ FSDP+TP+SP sharding and microbatching; "
+      "prefill/decode: serve step with sharded KV caches), then records "
+      "`memory_analysis()`, loop-aware HLO cost terms, and the collective "
+      "schedule.\n")
+    w("Methodology notes (see DESIGN.md §9): XLA `cost_analysis()` counts "
+      "while-loop bodies once, so FLOPs/bytes/collectives are re-derived "
+      "from the post-SPMD HLO with trip-count multiplication "
+      "(`launch/hlo_cost.py`, validated <5% vs analytic on scanned matmuls); "
+      "in-place `dynamic-update-slice` writes are billed at update-slice "
+      "size; XLA:CPU's f32 loop-carry round-trips (absent on TPU) are not "
+      "billed.\n")
+    if skips:
+        w("Skipped cells (all `long_500k` on pure full-attention archs, per "
+          "DESIGN.md §4):\n")
+        for d in skips:
+            w(f"- {d['arch']} {d['shape']} {d['mesh']}")
+        w("")
+    if fails:
+        w("FAILED cells:\n")
+        for d in fails:
+            w(f"- {d['arch']} {d['shape']} {d['mesh']}: {d.get('error')}")
+        w("")
+
+    # ----- §Roofline -----
+    w("## §Roofline (single-pod 16x16 baselines; multi-pod rows included "
+      "for dry-run completeness)\n")
+    w("| arch | shape | mesh | t_compute (s) | t_memory (s) | t_collective "
+      "(s) | bottleneck | MODEL_FLOPS/HLO_FLOPs | roofline fraction | "
+      "temp GB/dev |")
+    w("|---|---|---|---|---|---|---|---|---|---|")
+    for d in ok:
+        w(fmt_cell(d))
+    w("")
+    w("Reading the table: `useful` = MODEL_FLOPS / (HLO dot-FLOPs x chips) "
+      "— 6·N·D train / 2·N·D prefill / 2·N_active·B + KV-read decode; values "
+      "~0.74 on train cells reflect full-remat recompute (8/6 overhead) "
+      "plus causal-mask waste in chunked attention. `roofline fraction` = "
+      "ideal-compute time / max(three terms): decode cells are inherently "
+      "weight/KV-streaming bound, so their fraction is small by "
+      "construction — compare t_memory against the ideal stream time "
+      "instead (perf section). `temp GB/dev` > 16 GB flags cells that need "
+      "the §Perf variants to fit HBM.\n")
+
+    # ----- §Perf -----
+    w("## §Perf — hillclimb log (hypothesis -> change -> before -> after)\n")
+    w("Three cells selected per the brief: **worst roofline fraction** "
+      "(granite-moe prefill_32k), **most collective-bound** "
+      "(mistral-large-123b train_4k), **most representative of the paper** "
+      "(decode/serving cells, qwen3-32b decode_32k + the 100B-class decode "
+      "cells). Variant artifacts in `results/perf/`.\n")
+    w("| cell | variant | t_compute | t_memory | t_collective | frac | "
+      "temp GB |")
+    w("|---|---|---|---|---|---|---|")
+    base_by_key = {(d["arch"], d["shape"]): d for d in ok
+                   if d["mesh"] == "16x16"}
+    seen = set()
+    for d in perf:
+        key = (d["arch"], d["shape"])
+        if key in base_by_key and key not in seen:
+            b = base_by_key[key]
+            r = b["roofline"]
+            w(f"| {key[0]} {key[1]} | **baseline** | {r['t_compute_s']:.4f} "
+              f"| {r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+              f"{r['roofline_fraction']:.4f} | "
+              f"{b['memory']['temp_bytes']/1e9:.1f} |")
+            seen.add(key)
+        if not d.get("ok"):
+            w(f"| {key[0]} {key[1]} | {d.get('variant')} | FAIL | | | | |")
+            continue
+        r = d["roofline"]
+        w(f"| {key[0]} {key[1]} | {d.get('variant')} | {r['t_compute_s']:.4f} "
+          f"| {r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+          f"{r['roofline_fraction']:.4f} | "
+          f"{d['memory']['temp_bytes']/1e9:.1f} |")
+    w("")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,144 @@
+"""Sharded checkpointing with async save and mesh-elastic restore.
+
+Layout: one directory per step containing flat ``.npy`` leaves (path-encoded
+pytree keys) + a manifest.  Arrays are written from the addressable shards'
+assembled host value (on a real multi-host fleet each host writes its own
+shard files; the manifest layout already carries the spec, so the restore
+path is host-local — documented in DESIGN.md).
+
+Restore is *elastic*: arrays are re-placed under whatever mesh/sharding the
+caller provides (possibly a different topology than the save-time mesh),
+which is what repro.ft uses after a failure shrinks the fleet.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+
+_SEP = "::"
+_ASYNC_STATE: dict = {}
+
+# numpy .npy cannot roundtrip ml_dtypes (bfloat16 etc.); store a raw view and
+# record the true dtype in the manifest.
+_RAW_VIEW = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+             "float8_e5m2": np.uint8}
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    return str(p)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, *,
+                    keep: int = 3, blocking: bool = True,
+                    _async_state: dict = _ASYNC_STATE) -> str:
+    """Write `tree` under ckpt_dir/step_N (atomic rename)."""
+    base = Path(ckpt_dir)
+    base.mkdir(parents=True, exist_ok=True)
+    tmp = base / f".tmp_step_{step}"
+    final = base / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    flat = _flatten(tree)
+    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+
+    def write():
+        manifest = {}
+        for k, v in host.items():
+            fn = f"{abs(hash(k)) % 10**12}.npy"
+            true_dtype = str(v.dtype)
+            raw = _RAW_VIEW.get(true_dtype)
+            np.save(tmp / fn, v.view(raw) if raw is not None else v)
+            manifest[k] = {"file": fn, "shape": list(v.shape),
+                           "dtype": true_dtype}
+        (tmp / "manifest.json").write_text(json.dumps(
+            {"step": step, "arrays": manifest, "time": time.time()}))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _gc(base, keep)
+
+    if blocking:
+        write()
+    else:
+        prev: Optional[threading.Thread] = _async_state.get("thread")
+        if prev is not None and prev.is_alive():
+            prev.join()
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        _async_state["thread"] = t
+    return str(final)
+
+
+def wait_for_async_saves(_async_state: dict = _ASYNC_STATE):
+    t = _async_state.get("thread")
+    if t is not None:
+        t.join()
+
+
+def _gc(base: Path, keep: int):
+    steps = sorted((int(p.name.split("_")[1]), p)
+                   for p in base.glob("step_*"))
+    for _, p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    base = Path(ckpt_dir)
+    if not base.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in base.glob("step_*")
+             if (p / "manifest.json").exists()]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, tree_like, *,
+                       shardings=None):
+    """Restore into the structure of `tree_like`; if `shardings` (a matching
+    pytree of NamedSharding) is given, arrays are placed under it — possibly
+    a different mesh than at save time (elastic restore)."""
+    base = Path(ckpt_dir) / f"step_{step}"
+    manifest = json.loads((base / "manifest.json").read_text())["arrays"]
+    flat_like = _flatten(tree_like)
+    flat_sh = _flatten(shardings) if shardings is not None else {}
+    out = {}
+    for k, like in flat_like.items():
+        meta = manifest[k]
+        arr = np.load(base / meta["file"])
+        if meta["dtype"] in _RAW_VIEW:
+            arr = arr.view(getattr(ml_dtypes, meta["dtype"]))
+        sh = flat_sh.get(k)
+        if sh is not None:
+            out[k] = jax.device_put(arr, sh)
+        else:
+            out[k] = jnp.asarray(arr)
+    # unflatten along tree_like's structure
+    leaves_paths = jax.tree_util.tree_flatten_with_path(tree_like)
+    keys = [_SEP.join(_path_str(q) for q in path)
+            for path, _ in leaves_paths[0]]
+    return jax.tree_util.tree_unflatten(leaves_paths[1],
+                                        [out[k] for k in keys])

@@ -1,0 +1,4 @@
+from .base import (EncDecConfig, HybridConfig, LoRAConfig, ModelConfig,
+                   MoEConfig, SHAPES, SSMConfig, ShapeConfig, VLMConfig,
+                   smoke_shape)
+from .registry import ASSIGNED, get_config, list_archs, smoke_config

@@ -1,0 +1,25 @@
+"""Paper core: joint diagonalization LoRA compression (+clustering, theory)."""
+from .jd import (JDResult, jd_full, jd_full_eig, jd_diag, svd_per_lora,
+                 ties_merge, normalize_bank, product_frob_norms,
+                 reconstruction_errors, svd_reconstruction_errors,
+                 jd_objective, jd_convergence_gap)
+from .cluster import (ClusteredJD, cluster_jd, clustered_reconstruction_errors,
+                      parameter_counts)
+from .collection import (LoRABank, stack_bank, CompressionConfig,
+                         CompressedModule, compress_bank, compress_collection,
+                         export_for_serving, export_uncompressed,
+                         ServingAdapterBundle)
+from .recommend import Recommendation, recommend, recommend_rank, to_config
+from . import theory
+
+__all__ = [
+    "JDResult", "jd_full", "jd_full_eig", "jd_diag", "svd_per_lora",
+    "ties_merge", "normalize_bank", "product_frob_norms",
+    "reconstruction_errors", "svd_reconstruction_errors", "jd_objective",
+    "jd_convergence_gap", "ClusteredJD", "cluster_jd",
+    "clustered_reconstruction_errors", "parameter_counts", "LoRABank",
+    "stack_bank", "CompressionConfig", "CompressedModule", "compress_bank",
+    "compress_collection", "export_for_serving", "export_uncompressed",
+    "ServingAdapterBundle", "Recommendation", "recommend", "recommend_rank",
+    "to_config", "theory",
+]

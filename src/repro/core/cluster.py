@@ -1,0 +1,171 @@
+"""Clustered joint compression (§3.2, Appendix A.3).
+
+Alternates between (1) per-cluster JD-Full solves and (2) reassigning each
+adapter to the cluster whose shared basis reconstructs it best.  Every
+per-cluster solve runs over the *full* bank with a 0/1 membership mask so all
+shapes are static; k solves are vmapped.
+
+Initialization follows App. A.3: one global JD, then k-means on vec(Sigma_i).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .jd import (JDResult, jd_full, jd_full_eig, product_frob_norms,
+                 reconstruction_errors)
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ClusteredJD:
+    """k per-cluster bases + per-adapter sigma and assignment."""
+
+    U: Array        # (k, d_out, r)
+    V: Array        # (k, d_in, r)
+    sigma: Array    # (n, r, r)
+    assign: Array   # (n,) int32
+    diag: bool = dataclasses.field(metadata=dict(static=True), default=False)
+
+    @property
+    def n_clusters(self) -> int:
+        return self.U.shape[0]
+
+    @property
+    def rank(self) -> int:
+        return self.U.shape[-1]
+
+    def cluster_result(self, j: int) -> JDResult:
+        return JDResult(U=self.U[j], V=self.V[j], sigma=self.sigma, diag=self.diag)
+
+    def reconstruct(self, i: int) -> Array:
+        j = self.assign[i]
+        return self.U[j] @ self.sigma[i] @ self.V[j].T
+
+    def scale_sigma(self, scales: Array) -> "ClusteredJD":
+        shape = (-1,) + (1,) * (self.sigma.ndim - 1)
+        return dataclasses.replace(self, sigma=self.sigma * scales.reshape(shape))
+
+
+# ---------------------------------------------------------------------------
+# small fixed-iteration k-means on vec(sigma) for initialization
+# ---------------------------------------------------------------------------
+
+
+def _kmeans(x: Array, k: int, iters: int, key: Array) -> Array:
+    """Plain k-means; returns assignments (n,). x: (n, d)."""
+    n = x.shape[0]
+    # k-means++-ish init: random distinct points
+    idx = jax.random.choice(key, n, shape=(k,), replace=False)
+    cent = x[idx]
+
+    def body(cent, _):
+        d2 = jnp.sum((x[:, None, :] - cent[None]) ** 2, axis=-1)  # (n, k)
+        a = jnp.argmin(d2, axis=1)
+        onehot = jax.nn.one_hot(a, k, dtype=x.dtype)              # (n, k)
+        counts = jnp.maximum(onehot.sum(0), 1.0)
+        cent_new = (onehot.T @ x) / counts[:, None]
+        # keep old centroid for empty clusters
+        cent_new = jnp.where((onehot.sum(0) > 0)[:, None], cent_new, cent)
+        return cent_new, a
+
+    cent, assigns = jax.lax.scan(body, cent, None, length=iters)
+    return assigns[-1]
+
+
+# ---------------------------------------------------------------------------
+# assignment step: best cluster per adapter under orthogonal-U,V JD-Full
+# ---------------------------------------------------------------------------
+
+
+def _assignment_scores(A: Array, B: Array, U: Array, V: Array) -> Array:
+    """Retained energy ||U_j^T B_i A_i V_j||_F^2 for every (i, j).
+
+    With orthogonal U_j, V_j the reconstruction error of adapter i in cluster
+    j is ||B_iA_i||^2 - retained_ij, so argmax retained == argmin error.
+    Returns (n, k).
+    """
+    # (n,k,r_pad,r): A_i V_j and B_i^T U_j
+    AV = jnp.einsum("nri,kic->nkrc", A, V)
+    BtU = jnp.einsum("nor,koc->nkrc", B, U)
+    # Sigma_ij = U_j^T B_i A_i V_j = BtU^T @ AV  -> (n,k,r,r)
+    sig = jnp.einsum("nkrc,nkrd->nkcd", BtU, AV)
+    return jnp.sum(sig ** 2, axis=(-2, -1))
+
+
+def cluster_jd(A: Array, B: Array, rank: int, n_clusters: int,
+               outer_iters: int = 5, jd_iters: int = 10,
+               kmeans_iters: int = 10,
+               solver: str = "eig",
+               key: Optional[Array] = None) -> ClusteredJD:
+    """Full clustering driver (App. A.3).
+
+    solver: "eig" (App. A.2 iteration; default, accelerator friendly) or
+            "eigh" (App. A.1 exact alternating eigendecomposition).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    n = A.shape[0]
+    k = n_clusters
+    solve = {"eig": jd_full_eig, "eigh": jd_full}[solver]
+
+    # ---- init: global JD + k-means on vec(sigma) -------------------------
+    k_init, k_km, k_solve = jax.random.split(key, 3)
+    glob = solve(A, B, rank=rank, iters=jd_iters, key=k_init)
+    assign = _kmeans(glob.sigma.reshape(n, -1), k, kmeans_iters, k_km)
+
+    def solve_cluster(mask, kk):
+        return solve(A, B, rank=rank, iters=jd_iters, weights=mask, key=kk)
+
+    keys = jax.random.split(k_solve, k)
+
+    prev_assign = None
+    res = None
+    for _ in range(outer_iters):
+        masks = jax.nn.one_hot(assign, k, dtype=A.dtype).T  # (k, n)
+        res = jax.vmap(solve_cluster)(masks, keys)          # stacked JDResult
+        scores = _assignment_scores(A, B, res.U, res.V)     # (n, k)
+        assign = jnp.argmax(scores, axis=1).astype(jnp.int32)
+        if prev_assign is not None and bool(jnp.all(assign == prev_assign)):
+            break
+        prev_assign = assign
+
+    # final per-adapter sigma against its own cluster basis
+    U_i = res.U[assign]  # (n, d_out, r)
+    V_i = res.V[assign]  # (n, d_in, r)
+    sigma = jnp.einsum("nor,nok,nri,nil->nkl", B, U_i, A, V_i)
+    return ClusteredJD(U=res.U, V=res.V, sigma=sigma,
+                       assign=assign, diag=False)
+
+
+def clustered_reconstruction_errors(A: Array, B: Array, c: ClusteredJD) -> dict:
+    """Reconstruction metrics where each adapter uses its assigned cluster."""
+    norms_sq = product_frob_norms(A, B) ** 2
+    U_i, V_i = c.U[c.assign], c.V[c.assign]
+    BtU = jnp.einsum("nor,nok->nrk", B, U_i)
+    AV = jnp.einsum("nri,nik->nrk", A, V_i)
+    cross = jnp.einsum("nrk,nkl,nrl->n", BtU, c.sigma, AV)
+    # U_j, V_j orthonormal => gram = ||sigma_i||^2
+    gram = jnp.sum(c.sigma ** 2, axis=(-2, -1))
+    err_sq = jnp.maximum(norms_sq - 2.0 * cross + gram, 0.0)
+    rel = jnp.sqrt(err_sq / jnp.maximum(norms_sq, 1e-30))
+    return dict(err_sq=err_sq, norms_sq=norms_sq, rel_err=rel,
+                mean_rel_err=jnp.mean(rel),
+                loss=jnp.sum(err_sq) / jnp.maximum(jnp.sum(norms_sq), 1e-30))
+
+
+def parameter_counts(d_out: int, d_in: int, n: int, rank: int,
+                     n_clusters: int = 1, diag: bool = False,
+                     lora_rank: int = 16) -> dict:
+    """§F parameter accounting: compressed vs uncompressed counts."""
+    base = n * lora_rank * (d_out + d_in)
+    shared = n_clusters * rank * (d_out + d_in)
+    per = n * (rank if diag else rank * rank) + (n if n_clusters > 1 else 0)
+    comp = shared + per
+    return dict(uncompressed=base, compressed=comp,
+                saved_ratio=1.0 - comp / base)

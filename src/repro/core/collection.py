@@ -1,0 +1,200 @@
+"""Containers for LoRA collections and their compressed forms.
+
+A *collection* maps target-module names (e.g. ``"layers.0.attn.q_proj"``) to
+stacked adapter banks.  This is the interface between:
+
+- training (which produces per-task ``{module: (A_i, B_i)}`` pytrees),
+- compression (:mod:`repro.core.jd` / :mod:`repro.core.cluster`), and
+- serving (which wants per-module ``U/V/Sigma`` plus per-request indices).
+
+Heterogeneous ranks are zero-padded to the collection max (padding rows of A /
+columns of B with zeros leaves every product ``B_i A_i`` unchanged).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import jd as jd_mod
+from .cluster import ClusteredJD, cluster_jd, clustered_reconstruction_errors
+from .jd import (JDResult, jd_diag, jd_full, jd_full_eig, normalize_bank,
+                 reconstruction_errors, svd_per_lora, svd_reconstruction_errors,
+                 ties_merge)
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LoRABank:
+    """All adapters targeting one linear module."""
+
+    A: Array      # (n, r_pad, d_in)
+    B: Array      # (n, d_out, r_pad)
+    ranks: Array  # (n,) original ranks (before padding)
+
+    @property
+    def n(self) -> int:
+        return self.A.shape[0]
+
+    @property
+    def d_in(self) -> int:
+        return self.A.shape[-1]
+
+    @property
+    def d_out(self) -> int:
+        return self.B.shape[1]
+
+    def delta(self, i: int) -> Array:
+        return self.B[i] @ self.A[i]
+
+
+def stack_bank(pairs: Sequence[tuple], pad_to: Optional[int] = None) -> LoRABank:
+    """Stack [(A_1, B_1), ...] of possibly different ranks into a LoRABank."""
+    ranks = [a.shape[0] for a, _ in pairs]
+    r_pad = pad_to or max(ranks)
+    As, Bs = [], []
+    for a, b in pairs:
+        r = a.shape[0]
+        As.append(jnp.pad(a, ((0, r_pad - r), (0, 0))))
+        Bs.append(jnp.pad(b, ((0, 0), (0, r_pad - r))))
+    return LoRABank(A=jnp.stack(As), B=jnp.stack(Bs),
+                    ranks=jnp.asarray(ranks, dtype=jnp.int32))
+
+
+@dataclasses.dataclass
+class CompressionConfig:
+    method: str = "jd_full"       # jd_full | jd_full_eig | jd_diag | svd | ties
+    rank: int = 16
+    n_clusters: int = 1
+    iters: int = 10
+    normalize: bool = True        # §6.1 unit-Frobenius normalization
+    outer_iters: int = 5          # clustering alternations
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class CompressedModule:
+    """One module's compressed bank + bookkeeping."""
+
+    result: object                # JDResult or ClusteredJD
+    norms: Optional[Array]        # de-normalization scales (None if not normalized)
+    metrics: Dict[str, float]
+    method: str
+
+    @property
+    def clustered(self) -> bool:
+        return isinstance(self.result, ClusteredJD)
+
+
+def compress_bank(bank: LoRABank, cfg: CompressionConfig) -> CompressedModule:
+    """Compress one module bank according to ``cfg`` (renormalization folded
+    back into sigma so the stored compressed adapters reconstruct the ORIGINAL
+    products)."""
+    A, B = bank.A.astype(jnp.float32), bank.B.astype(jnp.float32)
+    norms = None
+    if cfg.normalize:
+        A, B, norms = normalize_bank(A, B)
+    key = jax.random.PRNGKey(cfg.seed)
+
+    if cfg.n_clusters > 1:
+        res = cluster_jd(A, B, rank=cfg.rank, n_clusters=cfg.n_clusters,
+                         outer_iters=cfg.outer_iters, jd_iters=cfg.iters,
+                         solver="eig" if cfg.method == "jd_full_eig" else "eigh",
+                         key=key)
+        errs = clustered_reconstruction_errors(A, B, res)
+    elif cfg.method in ("jd_full", "jd_full_eig", "jd_diag"):
+        fn = {"jd_full": jd_full, "jd_full_eig": jd_full_eig,
+              "jd_diag": jd_diag}[cfg.method]
+        res = fn(A, B, rank=cfg.rank, iters=cfg.iters, key=key)
+        errs = reconstruction_errors(A, B, res)
+    elif cfg.method == "svd":
+        res = svd_per_lora(A, B, rank=cfg.rank)
+        errs = svd_reconstruction_errors(A, B, res)
+    elif cfg.method == "ties":
+        res = ties_merge(A, B, rank=cfg.rank)
+        errs = reconstruction_errors(
+            A, B, JDResult(U=res.U, V=res.V, sigma=res.sigma, diag=True))
+    else:
+        raise ValueError(f"unknown method {cfg.method}")
+
+    if norms is not None:
+        res = res.scale_sigma(norms)
+
+    metrics = {k: float(v) for k, v in errs.items() if jnp.ndim(v) == 0}
+    return CompressedModule(result=res, norms=norms, metrics=metrics,
+                            method=cfg.method)
+
+
+def compress_collection(banks: Mapping[str, LoRABank], cfg: CompressionConfig,
+                        progress: Optional[Callable[[str, dict], None]] = None,
+                        ) -> Dict[str, CompressedModule]:
+    """Compress every module bank (the per-module independence of eq. 1)."""
+    out = {}
+    for name in sorted(banks):
+        out[name] = compress_bank(banks[name], cfg)
+        if progress is not None:
+            progress(name, out[name].metrics)
+    return out
+
+
+def collection_loss(comp: Mapping[str, CompressedModule]) -> float:
+    """Energy-weighted reconstruction loss across modules (§6.5 validation)."""
+    num = sum(m.metrics["loss"] * 1.0 for m in comp.values())
+    return num / max(len(comp), 1)
+
+
+# ---------------------------------------------------------------------------
+# serving export
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServingAdapterBundle:
+    """Device-ready arrays for the serving engine, one module.
+
+    Uncompressed:  A (n, r, d_in), B (n, d_out, r)
+    Compressed:    U (k, d_out, r), V (k, d_in, r), sigma (n, r[, r]),
+                   cluster_of (n,)
+    """
+
+    kind: str                     # "lora" | "jd"
+    arrays: Dict[str, Array]
+    param_bytes_shared: int       # resident once (U, V)
+    param_bytes_per_adapter: int  # per adapter (sigma / A+B)
+
+
+def export_for_serving(module: CompressedModule) -> ServingAdapterBundle:
+    res = module.result
+    if isinstance(res, ClusteredJD):
+        arrays = dict(U=res.U, V=res.V, sigma=res.sigma, cluster_of=res.assign)
+        shared = res.U.size + res.V.size
+        per = res.sigma[0].size + 1
+    else:
+        assert isinstance(res, JDResult)
+        if res.U.ndim == 3:   # svd baseline: per-adapter bases => nothing shared
+            arrays = dict(U=res.U, V=res.V, sigma=res.sigma,
+                          cluster_of=jnp.arange(res.n, dtype=jnp.int32))
+            shared = 0
+            per = res.U[0].size + res.V[0].size + res.sigma[0].size
+        else:
+            arrays = dict(U=res.U[None], V=res.V[None], sigma=res.sigma,
+                          cluster_of=jnp.zeros(res.n, dtype=jnp.int32))
+            shared = res.U.size + res.V.size
+            per = res.sigma[0].size
+    itemsize = 4
+    return ServingAdapterBundle(kind="jd", arrays=arrays,
+                                param_bytes_shared=shared * itemsize,
+                                param_bytes_per_adapter=per * itemsize)
+
+
+def export_uncompressed(bank: LoRABank) -> ServingAdapterBundle:
+    arrays = dict(A=bank.A, B=bank.B)
+    per = bank.A[0].size + bank.B[0].size
+    return ServingAdapterBundle(kind="lora", arrays=arrays,
+                                param_bytes_shared=0,
+                                param_bytes_per_adapter=per * 4)

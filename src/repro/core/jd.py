@@ -1,0 +1,379 @@
+"""Joint-diagonalization compression of LoRA collections.
+
+Implements the paper's §3.1 / Appendix A algorithms on *stacked* adapter
+banks.  A bank holds every adapter targeting one linear module:
+
+    A: (n, r_pad, d_in)   B: (n, d_out, r_pad)
+
+so that ``delta_i = B[i] @ A[i]``.  Adapters of heterogeneous rank are
+zero-padded to ``r_pad`` (padding does not change the product).
+
+Algorithms
+----------
+- :func:`jd_full`           eq. (2), alternating eigendecomposition (App. A.1 case 1)
+- :func:`jd_full_eig`       App. A.2 QR eigenvalue-iteration variant (accelerator friendly)
+- :func:`jd_diag`           eq. (3), triple-least-squares coordinate descent (App. A.1 case 2)
+- :func:`svd_per_lora`      eq. (4), the k = n degenerate case (r-SVD baseline)
+- :func:`ties_merge`        TIES-merging baseline (App. H.3)
+
+All routines accept an optional per-adapter ``weights`` vector (0/1 mask or
+soft weights); the clustering driver in :mod:`repro.core.cluster` reuses them
+with membership masks so every cluster solve is a fixed-shape jittable call.
+
+Everything here is pure JAX and runs in float32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# containers
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class JDResult:
+    """Compressed representation of one bank: ``B_i A_i ~= U @ Sigma_i @ V^T``.
+
+    ``sigma`` is (n, r, r) when ``diag`` is False, else (n, r).
+    """
+
+    U: Array  # (d_out, r)
+    V: Array  # (d_in, r)
+    sigma: Array
+    diag: bool = dataclasses.field(metadata=dict(static=True), default=False)
+
+    @property
+    def rank(self) -> int:
+        return self.U.shape[-1]
+
+    @property
+    def n(self) -> int:
+        return self.sigma.shape[0]
+
+    def sigma_full(self) -> Array:
+        """Sigma as (n, r, r) regardless of parameterization."""
+        if self.diag:
+            r = self.sigma.shape[-1]
+            return self.sigma[..., None] * jnp.eye(r, dtype=self.sigma.dtype)
+        return self.sigma
+
+    def reconstruct(self, i: Optional[int] = None) -> Array:
+        """Materialize reconstructed delta(s). (n, d_out, d_in) or (d_out, d_in)."""
+        sig = self.sigma_full()
+        if i is not None:
+            sig = sig[i]
+            return self.U @ sig @ self.V.T
+        return jnp.einsum("or,nrs,is->noi", self.U, sig, self.V)
+
+    def scale_sigma(self, scales: Array) -> "JDResult":
+        shape = (-1,) + (1,) * (self.sigma.ndim - 1)
+        return dataclasses.replace(self, sigma=self.sigma * scales.reshape(shape))
+
+
+# ---------------------------------------------------------------------------
+# bank helpers (work on stacked A/B without forming n x d_out x d_in products)
+# ---------------------------------------------------------------------------
+
+
+def product_frob_norms(A: Array, B: Array) -> Array:
+    """||B_i A_i||_F for each adapter, without forming the products.
+
+    tr(A^T B^T B A) = sum((B^T B) * (A A^T))  elementwise with transpose pairing.
+    """
+    BtB = jnp.einsum("nor,nos->nrs", B, B)  # (n, r, r)
+    AAt = jnp.einsum("nri,nsi->nrs", A, A)  # (n, r, r)
+    sq = jnp.sum(BtB * AAt, axis=(-2, -1))
+    return jnp.sqrt(jnp.maximum(sq, 0.0))
+
+
+def normalize_bank(A: Array, B: Array, eps: float = 1e-12):
+    """Frobenius-normalize each product to 1 (§6.1) by scaling A.
+
+    Returns (A_hat, B, norms); de-normalize by ``result.scale_sigma(norms)``.
+    """
+    norms = product_frob_norms(A, B)
+    A_hat = A / jnp.maximum(norms, eps)[:, None, None]
+    return A_hat, B, norms
+
+
+def reconstruction_errors(A: Array, B: Array, res: JDResult,
+                          weights: Optional[Array] = None) -> dict:
+    """Per-adapter squared errors + relative metrics, product-free.
+
+    ||BA - U S V^T||^2 = ||BA||^2 - 2 tr(A^T B^T U S V^T) + tr(S^T U^T U S V^T V)
+    """
+    n = A.shape[0]
+    sig = res.sigma_full()
+    norms_sq = product_frob_norms(A, B) ** 2  # (n,)
+    BtU = jnp.einsum("nor,ok->nrk", B, res.U)  # (n, r_pad, r)
+    AV = jnp.einsum("nri,ik->nrk", A, res.V)  # (n, r_pad, r)
+    # tr(A^T B^T U S V^T) = sum over (B^T U)^T S-weighted (A V)
+    cross = jnp.einsum("nrk,nkl,nrl->n", BtU, sig, AV)
+    UtU = res.U.T @ res.U
+    VtV = res.V.T @ res.V
+    gram = jnp.einsum("nkl,km,nmp,lp->n", sig, UtU, sig, VtV)
+    err_sq = jnp.maximum(norms_sq - 2.0 * cross + gram, 0.0)
+    rel = jnp.sqrt(err_sq / jnp.maximum(norms_sq, 1e-30))
+    w = jnp.ones(n) if weights is None else weights
+    wsum = jnp.maximum(jnp.sum(w), 1e-30)
+    return dict(
+        err_sq=err_sq,
+        norms_sq=norms_sq,
+        rel_err=rel,
+        mean_rel_err=jnp.sum(rel * w) / wsum,
+        # the paper's "reconstruction loss" (<= 0.6 rule in §6.5): energy ratio
+        loss=jnp.sum(err_sq * w) / jnp.maximum(jnp.sum(norms_sq * w), 1e-30),
+    )
+
+
+def _weighted(x: Array, weights: Optional[Array]) -> Array:
+    if weights is None:
+        return x
+    return x * weights.reshape((-1,) + (1,) * (x.ndim - 1))
+
+
+def _orthonormalize(M: Array) -> Array:
+    """Column-orthonormalize via reduced QR (the paper's `orthogonalize`)."""
+    q, r = jnp.linalg.qr(M)
+    # fix sign for determinism: make diag(r) nonnegative
+    s = jnp.sign(jnp.diagonal(r))
+    s = jnp.where(s == 0, 1.0, s)
+    return q * s[None, :]
+
+
+def _top_r_eigvecs(M: Array, r: int) -> Array:
+    """Top-r eigenvectors of a PSD matrix (ascending eigh -> take tail)."""
+    _, vecs = jnp.linalg.eigh(M)
+    return vecs[:, -r:][:, ::-1]
+
+
+def _sigma_full_from(U: Array, V: Array, A: Array, B: Array) -> Array:
+    """Sigma_i = U^T B_i A_i V  (eq. 6), computed as (U^T B_i)(A_i V)."""
+    return jnp.einsum("nor,ok,nri,il->nkl", B, U, A, V)
+
+
+# ---------------------------------------------------------------------------
+# JD-Full: alternating eigendecomposition (App. A.1 case 1)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("rank", "iters"))
+def jd_full(A: Array, B: Array, rank: int, iters: int = 10,
+            weights: Optional[Array] = None,
+            key: Optional[Array] = None) -> JDResult:
+    """JD-Full via alternating top-r eigendecompositions.
+
+    U-iter: M = sum_i w_i G_i G_i^T with G_i = B_i (A_i V)   -> U = eigvecs_r(M)
+    V-iter: N = sum_i w_i K_i K_i^T with K_i = A_i^T (B_i^T U) -> V = eigvecs_r(N)
+    """
+    n, _, d_in = A.shape
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    V = _orthonormalize(jax.random.normal(key, (d_in, rank), dtype=A.dtype))
+
+    def body(carry, _):
+        V = carry
+        G = jnp.einsum("nor,nri,ik->nok", B, A, V)  # (n, d_out, r)
+        G = _weighted(G, None if weights is None else jnp.sqrt(weights))
+        M = jnp.einsum("nok,npk->op", G, G)
+        U = _top_r_eigvecs(M, rank)
+        K = jnp.einsum("nri,nor,ok->nik", A, B, U)  # (n, d_in, r)
+        K = _weighted(K, None if weights is None else jnp.sqrt(weights))
+        N = jnp.einsum("nik,njk->ij", K, K)
+        V = _top_r_eigvecs(N, rank)
+        return V, None
+
+    V, _ = jax.lax.scan(body, V, None, length=iters)
+    # final U for the converged V, then sigma
+    G = jnp.einsum("nor,nri,ik->nok", B, A, V)
+    G = _weighted(G, None if weights is None else jnp.sqrt(weights))
+    M = jnp.einsum("nok,npk->op", G, G)
+    U = _top_r_eigvecs(M, rank)
+    sigma = _sigma_full_from(U, V, A, B)
+    return JDResult(U=U, V=V, sigma=sigma, diag=False)
+
+
+# ---------------------------------------------------------------------------
+# JD-Full: QR eigenvalue iteration (App. A.2) — accelerator friendly
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("rank", "iters"))
+def jd_full_eig(A: Array, B: Array, rank: int, iters: int = 30,
+                weights: Optional[Array] = None,
+                key: Optional[Array] = None) -> JDResult:
+    """JD-Full via the paper's QR-orthogonalized power iteration.
+
+    U0 <- sum_i B_i (A_i V)((A_i V)^T (B_i^T U));  U <- qr(U0)
+    V0 <- sum_i A_i^T (B_i^T U)((B_i^T U)^T (A_i V));  V <- qr(V0)
+
+    Only r-width matmuls + one QR per update: no d x d eigendecompositions.
+    """
+    n, _, d_in = A.shape
+    d_out = B.shape[1]
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    ku, kv = jax.random.split(key)
+    U = _orthonormalize(jax.random.normal(ku, (d_out, rank), dtype=A.dtype))
+    V = _orthonormalize(jax.random.normal(kv, (d_in, rank), dtype=A.dtype))
+
+    def body(carry, _):
+        U, V = carry
+        AV = jnp.einsum("nri,ik->nrk", A, V)       # (n, r_pad, r)
+        BtU = jnp.einsum("nor,ok->nrk", B, U)      # (n, r_pad, r)
+        AV_w = _weighted(AV, weights)
+        # U0 = sum_i B_i [ AV_i (AV_i^T BtU_i) ]
+        inner_u = jnp.einsum("nrk,nrl->nkl", AV, BtU)   # (n, r, r)
+        U0 = jnp.einsum("nor,nrk,nkl->ol", B, AV_w, inner_u)
+        U_new = _orthonormalize(U0)
+        BtU2 = jnp.einsum("nor,ok->nrk", B, U_new)
+        inner_v = jnp.einsum("nrk,nrl->nkl", BtU2, AV)  # (n, r, r)
+        BtU2_w = _weighted(BtU2, weights)
+        V0 = jnp.einsum("nri,nrk,nkl->il", A, BtU2_w, inner_v)
+        V_new = _orthonormalize(V0)
+        return (U_new, V_new), None
+
+    (U, V), _ = jax.lax.scan(body, (U, V), None, length=iters)
+    sigma = _sigma_full_from(U, V, A, B)
+    return JDResult(U=U, V=V, sigma=sigma, diag=False)
+
+
+def jd_convergence_gap(U_prev: Array, U_next: Array) -> Array:
+    """App. H.12 convergence criterion term: ||U+ - U U^T U+||_F / ||U+||_F."""
+    resid = U_next - U_prev @ (U_prev.T @ U_next)
+    return jnp.linalg.norm(resid) / jnp.maximum(jnp.linalg.norm(U_next), 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# JD-Diag: triple least squares (App. A.1 case 2)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("rank", "iters"))
+def jd_diag(A: Array, B: Array, rank: int, iters: int = 10,
+            weights: Optional[Array] = None,
+            key: Optional[Array] = None) -> JDResult:
+    """JD-Diag coordinate descent: solve U, V, then diag(Sigma_i) in cycle."""
+    n, _, d_in = A.shape
+    d_out = B.shape[1]
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    ku, kv = jax.random.split(key)
+    # warm-start from orthonormal random; s_i = 1
+    U = _orthonormalize(jax.random.normal(ku, (d_out, rank), dtype=A.dtype))
+    V = _orthonormalize(jax.random.normal(kv, (d_in, rank), dtype=A.dtype))
+    s = jnp.ones((n, rank), dtype=A.dtype)
+    w = jnp.ones((n,), dtype=A.dtype) if weights is None else weights
+
+    def ridge_solve(M, rhs):
+        # (r, r) solve with a tiny Tikhonov floor for rank-deficient cases
+        r = M.shape[0]
+        return jnp.linalg.solve(M + 1e-8 * jnp.trace(M) / r * jnp.eye(r, dtype=M.dtype), rhs)
+
+    def body(carry, _):
+        U, V, s = carry
+        AV = jnp.einsum("nri,ik->nrk", A, V)            # (n, r_pad, r)
+        G = jnp.einsum("nor,nrk->nok", B, AV)           # (n, d_out, r) = B_i A_i V
+        # U = (sum_i w G_i diag(s_i)) (sum_i w diag(s_i) V^T V diag(s_i))^{-1}
+        t1 = jnp.einsum("n,nok,nk->ok", w, G, s)
+        VtV = V.T @ V
+        t2 = VtV * jnp.einsum("n,nk,nl->kl", w, s, s)
+        U = ridge_solve(t2.T, t1.T).T
+        # V update
+        BtU = jnp.einsum("nor,ok->nrk", B, U)           # (n, r_pad, r)
+        H = jnp.einsum("nri,nrk->nik", A, BtU)          # (n, d_in, r) = A_i^T B_i^T U
+        t1v = jnp.einsum("n,nik,nk->ik", w, H, s)
+        UtU = U.T @ U
+        t2v = UtU * jnp.einsum("n,nk,nl->kl", w, s, s)
+        V = ridge_solve(t2v.T, t1v.T).T
+        # sigma update: s_i = (U^T U o V^T V)^{-1} (U^T B_i o V^T A_i^T) 1
+        AV = jnp.einsum("nri,ik->nrk", A, V)
+        BtU = jnp.einsum("nor,ok->nrk", B, U)
+        q = jnp.einsum("nrk,nrk->nk", BtU, AV)          # (n, r)
+        M_uv = (U.T @ U) * (V.T @ V)
+        s = ridge_solve(M_uv, q.T).T
+        return (U, V, s), None
+
+    (U, V, s), _ = jax.lax.scan(body, (U, V, s), None, length=iters)
+    return JDResult(U=U, V=V, sigma=s, diag=True)
+
+
+# ---------------------------------------------------------------------------
+# baselines
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("rank",))
+def svd_per_lora(A: Array, B: Array, rank: int) -> JDResult:
+    """r-SVD baseline (eq. 4): per-adapter truncated SVD, batched.
+
+    Economical: QR-factor B_i and A_i^T, SVD the small (r_pad x r_pad) core.
+    Returned as a JDResult-per-adapter bank stacked on axis 0 with
+    U: (n, d_out, r), V: (n, d_in, r), sigma: (n, r).
+    """
+
+    def one(a, b):
+        qb, rb = jnp.linalg.qr(b)           # (d_out, r_pad), (r_pad, r_pad)
+        qa, ra = jnp.linalg.qr(a.T)         # (d_in, r_pad)
+        core = rb @ ra.T                    # (r_pad, r_pad)
+        u, s, vt = jnp.linalg.svd(core)
+        u_r, s_r, v_r = u[:, :rank], s[:rank], vt[:rank, :].T
+        return qb @ u_r, qa @ v_r, s_r
+
+    U, V, s = jax.vmap(one)(A, B)
+    return JDResult(U=U, V=V, sigma=s, diag=True)
+
+
+def svd_reconstruction_errors(A: Array, B: Array, res: JDResult) -> dict:
+    """Reconstruction metrics for the per-adapter SVD baseline."""
+    norms_sq = product_frob_norms(A, B) ** 2
+    kept = jnp.sum(res.sigma ** 2, axis=-1)
+    err_sq = jnp.maximum(norms_sq - kept, 0.0)
+    rel = jnp.sqrt(err_sq / jnp.maximum(norms_sq, 1e-30))
+    return dict(err_sq=err_sq, norms_sq=norms_sq, rel_err=rel,
+                mean_rel_err=jnp.mean(rel),
+                loss=jnp.sum(err_sq) / jnp.maximum(jnp.sum(norms_sq), 1e-30))
+
+
+@functools.partial(jax.jit, static_argnames=("rank", "trim_frac"))
+def ties_merge(A: Array, B: Array, rank: int, trim_frac: float = 0.2) -> JDResult:
+    """TIES-merging baseline: trim -> elect sign -> disjoint mean -> rank-r SVD.
+
+    Consolidates every adapter into ONE rank-r LoRA (Table 7's Ties row).
+    Materializes the (d_out, d_in) merged task matrix (fine at LoRA scale).
+    """
+    deltas = jnp.einsum("nor,nri->noi", B, A)  # (n, d_out, d_in)
+    mag = jnp.abs(deltas)
+    kth = jnp.quantile(mag.reshape(mag.shape[0], -1), 1.0 - trim_frac, axis=1)
+    trimmed = jnp.where(mag >= kth[:, None, None], deltas, 0.0)
+    sign = jnp.sign(jnp.sum(trimmed, axis=0))
+    agree = jnp.where(jnp.sign(trimmed) == sign[None], trimmed, 0.0)
+    cnt = jnp.sum(jnp.abs(jnp.sign(agree)), axis=0)
+    merged = jnp.sum(agree, axis=0) / jnp.maximum(cnt, 1.0)
+    u, s, vt = jnp.linalg.svd(merged, full_matrices=False)
+    U, sig, V = u[:, :rank], s[:rank], vt[:rank, :].T
+    n = A.shape[0]
+    return JDResult(U=U, V=V, sigma=jnp.tile(sig[None], (n, 1)), diag=True)
+
+
+# ---------------------------------------------------------------------------
+# objective (for tests / convergence monitoring)
+# ---------------------------------------------------------------------------
+
+
+def jd_objective(A: Array, B: Array, res: JDResult,
+                 weights: Optional[Array] = None) -> Array:
+    """sum_i w_i ||B_i A_i - U Sigma_i V^T||_F^2 (eq. 1)."""
+    errs = reconstruction_errors(A, B, res, weights)
+    w = jnp.ones(A.shape[0]) if weights is None else weights
+    return jnp.sum(errs["err_sq"] * w)

@@ -1,0 +1,80 @@
+"""Numeric checks of the paper's §4 theory (Prop. 1, Thm. 1, Cor. 1).
+
+These are used by property tests and by ``benchmarks/recon_random_vs_trained``
+to show where real LoRA collections sit between the merged-model lower bound
+and the spectral upper bound.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .jd import JDResult, product_frob_norms
+
+Array = jax.Array
+
+
+def tilde_r(A: Array, B: Array, tol: float = 1e-6) -> int:
+    """Prop. 1 threshold: max(rank([A_1;...]), rank([B_1,...]))."""
+    n, r_pad, d_in = A.shape
+    d_out = B.shape[1]
+    A_cat = A.reshape(n * r_pad, d_in)
+    B_cat = jnp.transpose(B, (1, 0, 2)).reshape(d_out, n * r_pad)
+    ra = jnp.linalg.matrix_rank(A_cat, tol=tol)
+    rb = jnp.linalg.matrix_rank(B_cat, tol=tol)
+    return int(jnp.maximum(ra, rb))
+
+
+def theorem1_bounds(A: Array, B: Array, rank: int) -> dict:
+    """Thm. 1: sum_j<=r sigbar_j^2 <= sum_i ||Sigma_i||^2 <= sum_j<=min(r^2,n) sig_j^2.
+
+    sig_j  = singular values of L = [vec(B_1A_1) ... vec(B_nA_n)]
+    sigbar = singular values of sum_i B_i A_i.
+    Materializes the products — use on test-scale dims only.
+    """
+    n = A.shape[0]
+    deltas = jnp.einsum("nor,nri->noi", B, A)
+    L = deltas.reshape(n, -1).T                     # (d_out*d_in, n)
+    sig = jnp.linalg.svd(L, compute_uv=False)       # length min(d^2, n)
+    merged = jnp.sum(deltas, axis=0)
+    sigbar = jnp.linalg.svd(merged, compute_uv=False)
+    lower = jnp.sum(sigbar[:rank] ** 2)
+    upper = jnp.sum(sig[: min(rank * rank, n)] ** 2)
+    total = jnp.sum(sig ** 2)                       # = sum_i ||B_iA_i||^2
+    # NOTE (reproduction finding): the paper's proof of the lower bound
+    # applies Jensen as  sum_i ||x_i||^2 >= ||sum_i x_i||^2, which misses the
+    # 1/n factor (counterexample: x_i identical).  The corrected bound is
+    # sum_i ||Sigma_i||^2 >= (1/n) * sum_{j<=r} sigbar_j^2; we verify that.
+    return dict(lower=float(lower), lower_corrected=float(lower / n),
+                upper=float(upper), total=float(total),
+                sig=sig, sigbar=sigbar)
+
+
+def retained_energy(res: JDResult) -> float:
+    """sum_i ||Sigma_i||_F^2 (the quantity Thm. 1 bounds; requires orthogonal
+    U, V, i.e. JD-Full)."""
+    return float(jnp.sum(res.sigma_full() ** 2))
+
+
+def check_theorem1(A: Array, B: Array, res: JDResult, atol: float = 1e-3) -> dict:
+    b = theorem1_bounds(A, B, res.rank)
+    kept = retained_energy(res)
+    return dict(
+        lower=b["lower"], lower_corrected=b["lower_corrected"], kept=kept,
+        upper=b["upper"], total=b["total"],
+        lower_ok=bool(kept >= b["lower_corrected"] - atol * max(b["total"], 1.0)),
+        lower_literal_ok=bool(kept >= b["lower"] - atol * max(b["total"], 1.0)),
+        upper_ok=bool(kept <= b["upper"] + atol * max(b["total"], 1.0)),
+        error_lb=float(1.0 - b["upper"] / max(b["total"], 1e-30)),
+    )
+
+
+def corollary1_regime(A: Array, B: Array) -> dict:
+    """Cor. 1 preconditions: unit Frobenius norms + pairwise orthogonality."""
+    n = A.shape[0]
+    deltas = jnp.einsum("nor,nri->noi", B, A)
+    flat = deltas.reshape(n, -1)
+    gram = flat @ flat.T
+    norms = jnp.sqrt(jnp.diagonal(gram))
+    off = gram - jnp.diag(jnp.diagonal(gram))
+    return dict(norms=norms, max_off_diag=float(jnp.max(jnp.abs(off))))

@@ -1,0 +1,150 @@
+"""Logical-axis sharding rules (MaxText-style) with automatic divisibility
+fallback.
+
+Every parameter / activation dimension carries a *logical* axis name; rules
+map logical names to mesh axis names.  If a dimension is not divisible by the
+product of its mapped mesh axes, the mapping silently falls back to
+replication for that dimension (e.g. granite's 24 heads or 8 KV heads on a
+16-way model axis).  This keeps one rule table valid across all 10 archs.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[str, Tuple[str, ...], None]
+
+# logical axis -> mesh axes (tuple = sharded over multiple mesh axes)
+DEFAULT_RULES: Dict[str, AxisName] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_sp": "model",        # Megatron-SP: layer-boundary activations seq-sharded
+    "kv_seq": "model",        # KV-cache sequence dim (used when kv heads don't divide)
+    "d_model": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "d_ff": "model",
+    "experts": "model",
+    "expert_ff": "model",     # claims model ONLY if experts could not (spec_for order)
+    "vocab": "model",
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "ssm_groups": None,
+    "conv_k": None,
+    "layers": None,           # scan axis
+    "rank": None,             # LoRA / JD rank
+    "adapters": None,
+    "clusters": None,
+    "stats": None,
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Dict[str, AxisName] = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[Dict[str, AxisName]] = None):
+    """Activate a mesh + rules for spec resolution and constraints."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    if rules is not None:
+        _CTX.rules = {**DEFAULT_RULES, **rules}
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _mesh_axis_size(mesh: Mesh, name: AxisName) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= _mesh_axis_size(mesh, n)
+        return out
+    return mesh.shape.get(name, 1)
+
+
+def _resolve_axis(mesh: Mesh, rules, logical: Optional[str], dim: int) -> AxisName:
+    if logical is None:
+        return None
+    mapped = rules.get(logical)
+    if mapped is None:
+        return None
+    # drop mesh axes absent from this mesh (e.g. "pod" on single-pod)
+    if isinstance(mapped, tuple):
+        mapped = tuple(m for m in mapped if m in mesh.shape)
+        if not mapped:
+            return None
+        if len(mapped) == 1:
+            mapped = mapped[0]
+    elif mapped not in mesh.shape:
+        return None
+    size = _mesh_axis_size(mesh, mapped)
+    if size <= 1 or dim % size != 0:
+        return None  # divisibility fallback -> replicate
+    return mapped
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+             mesh: Optional[Mesh] = None,
+             rules: Optional[Dict[str, AxisName]] = None) -> P:
+    """PartitionSpec for an array with given logical axes under a mesh."""
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    if mesh is None:
+        return P()
+    assert len(shape) == len(axes), (shape, axes)
+    used = set()
+    parts = []
+    for dim, ax in zip(shape, axes):
+        resolved = _resolve_axis(mesh, rules, ax, dim)
+        # a mesh axis may appear at most once in a spec
+        flat = (resolved,) if isinstance(resolved, str) else (resolved or ())
+        if any(f in used for f in flat):
+            resolved = None
+        else:
+            used.update(flat)
+        parts.append(resolved)
+    return P(*parts)
+
+
+def sharding_for(shape, axes, mesh=None, rules=None) -> Optional[NamedSharding]:
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(shape, axes, mesh, rules))
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op without a mesh."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = spec_for(x.shape, axes, mesh, _CTX.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_spec(mesh: Optional[Mesh] = None) -> P:
+    """Spec for a (B, ...) input batch dim."""
+    return spec_for((1 << 30,), ("batch",), mesh)  # huge dim => always divisible

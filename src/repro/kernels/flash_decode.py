@@ -1,0 +1,107 @@
+"""Flash-decode attention kernel: one query token per sequence against a long
+KV cache, online-softmax over KV blocks (FlashDecoding-style, TPU tiling).
+
+Grid is (B, Kv, S_blocks); the S dimension is the minor (sequential on TPU)
+axis so fp32 scratch accumulators persist across KV blocks of one (b, head).
+Used by the serving engine's decode step and by the sequence-sharded
+long-context path (each shard runs this kernel over its KV slice, partial
+(m, l, o) stats are merged across shards — see distributed/collectives.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .sgmv import _pick_block
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _decode_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, l_ref, m_ref,
+                   acc_ref, m_sc, l_sc):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, hd)
+    q = q * (q.shape[-1] ** -0.5)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)               # (bs, hd)
+    bs = k.shape[0]
+    logits = jax.lax.dot_general(
+        q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (G, bs)
+    pos = s * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = pos < kvlen_ref[b]
+    logits = jnp.where(valid, logits, NEG_INF)
+    m_prev = m_sc[...]                                   # (G, 1)
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1, keepdims=True))
+    p = jnp.exp(logits - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_sc[...] = l_sc[...] * alpha + p.sum(-1, keepdims=True)
+    m_sc[...] = m_new
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(s == ns - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_sc[...], 1e-30)
+                       ).astype(o_ref.dtype)
+        l_ref[0, 0] = l_sc[...]
+        m_ref[0, 0] = m_sc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def flash_decode(q: Array, k: Array, v: Array, kv_len: Array, *,
+                 block_s: int = 512, interpret: bool = True):
+    """q: (B, H, hd); k/v: (B, S, Kv, hd); kv_len: (B,) int32.
+
+    Returns (out (B, H, hd), l (B, Kv, G, 1), m (B, Kv, G, 1)) — the (l, m)
+    stats allow cross-shard softmax merging for sequence-sharded KV.
+    """
+    B, H, hd = q.shape
+    S, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    bs = _pick_block(S, block_s)
+    grid = (B, Kv, S // bs)
+    qg = q.reshape(B, Kv, G, hd)
+    out, l, m = pl.pallas_call(
+        _decode_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd), lambda b, h, s, kl: (b, h, 0, 0)),
+                pl.BlockSpec((1, bs, 1, hd), lambda b, h, s, kl: (b, s, h, 0)),
+                pl.BlockSpec((1, bs, 1, hd), lambda b, h, s, kl: (b, s, h, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, G, hd), lambda b, h, s, kl: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, G, 1), lambda b, h, s, kl: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, G, 1), lambda b, h, s, kl: (b, h, 0, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((G, hd), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Kv, G, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, Kv, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, Kv, G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len, qg, k, v)
+    return out.reshape(B, H, hd), l, m

@@ -1,0 +1,81 @@
+"""Jit'd wrappers dispatching between Pallas kernels and jnp oracles.
+
+``use_pallas='auto'`` picks the Pallas path on TPU backends and interpret
+mode in tests; the jnp refs serve CPU execution and the SPMD dry-run (Pallas
+TPU kernels do not lower on the forced-host-device CPU backend)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as ref_mod
+from .flash_decode import flash_decode as _flash_decode_pallas
+from .jd_apply import jd_apply as _jd_apply_pallas
+from .sgmv import sgmv_expand, sgmv_shrink, sigma_bmm
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_impl(use_pallas) -> str:
+    """'pallas' | 'interpret' | 'ref'."""
+    if use_pallas in ("pallas", "interpret", "ref"):
+        return use_pallas
+    return "pallas" if _on_tpu() else "ref"
+
+
+def lora_apply(x: Array, A: Array, B: Array, ids: Array, *,
+               tile: int = 128, scaling: float = 1.0,
+               use_pallas="auto") -> Array:
+    """Uncompressed multi-LoRA delta on flattened tokens (the baseline path).
+
+    x: (T, d_in); A: (n, r, d_in); B: (n, d_out, r); ids: (T,)."""
+    impl = resolve_impl(use_pallas)
+    if impl == "ref":
+        return ref_mod.lora_apply_ref(x, A, B, ids, scaling)
+    perm, tile_ids, valid = ref_mod.group_tokens_by_adapter(
+        ids, A.shape[0], tile)
+    xg = x[perm]
+    t = sgmv_shrink(xg, A, tile_ids, block_t=tile,
+                    interpret=(impl == "interpret"))
+    y = sgmv_expand(t.astype(x.dtype), B, tile_ids, block_t=tile,
+                    interpret=(impl == "interpret"))
+    out = jnp.zeros((x.shape[0], B.shape[1]), x.dtype)
+    out = out.at[perm].add(y * valid[:, None].astype(y.dtype))
+    return out * scaling
+
+
+def jd_apply(x: Array, U: Array, V: Array, sigma: Array, cluster_of: Array,
+             ids: Array, *, tile: int = 128, use_pallas="auto") -> Array:
+    """Compressed (JD) multi-LoRA delta on flattened tokens."""
+    impl = resolve_impl(use_pallas)
+    if impl == "ref":
+        return ref_mod.jd_apply_ref(x, U, V, sigma, cluster_of, ids)
+    perm, tile_ids, valid = ref_mod.group_tokens_by_adapter(
+        ids, sigma.shape[0], tile)
+    xg = x[perm]
+    idg = ids[perm]
+    tile_cids = cluster_of[tile_ids]
+    y = _jd_apply_pallas(xg, U, V, sigma, cluster_of, idg, tile_cids,
+                         tile_ids, block_t=tile,
+                         interpret=(impl == "interpret"))
+    out = jnp.zeros((x.shape[0], U.shape[1]), x.dtype)
+    out = out.at[perm].add(y * valid[:, None].astype(y.dtype))
+    return out
+
+
+def decode_attention(q: Array, k: Array, v: Array, kv_len: Array, *,
+                     use_pallas="auto") -> Array:
+    """Decode attention (one token per sequence)."""
+    impl = resolve_impl(use_pallas)
+    if impl == "ref":
+        return ref_mod.flash_decode_ref(q, k, v, kv_len)
+    out, _, _ = _flash_decode_pallas(q, k, v, kv_len,
+                                     interpret=(impl == "interpret"))
+    return out

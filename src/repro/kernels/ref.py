@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` layer).
+
+Token-level interfaces: the serving engine flattens a continuous batch into
+(T, d) tokens with per-token adapter/group metadata.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def sgmv_shrink_ref(x: Array, A: Array, ids: Array) -> Array:
+    """y[t] = A[ids[t]] @ x[t].   x: (T, d_in), A: (n, r, d_in) -> (T, r)."""
+    return jnp.einsum("trd,td->tr", A[ids].astype(jnp.float32),
+                      x.astype(jnp.float32)).astype(x.dtype)
+
+
+def sgmv_expand_ref(t: Array, B: Array, ids: Array) -> Array:
+    """y[i] = B[ids[i]] @ t[i].   t: (T, r), B: (n, d_out, r) -> (T, d_out)."""
+    return jnp.einsum("tor,tr->to", B[ids].astype(jnp.float32),
+                      t.astype(jnp.float32)).astype(t.dtype)
+
+
+def lora_apply_ref(x: Array, A: Array, B: Array, ids: Array,
+                   scaling: float = 1.0) -> Array:
+    """Uncompressed multi-LoRA delta: B[id] @ (A[id] @ x) per token."""
+    t = sgmv_shrink_ref(x, A, ids)
+    return sgmv_expand_ref(t, B, ids) * scaling
+
+
+def jd_apply_ref(x: Array, U: Array, V: Array, sigma: Array,
+                 cluster_of: Array, ids: Array) -> Array:
+    """Compressed (JD) multi-LoRA delta per token.
+
+    x: (T, d_in); U: (k, d_out, r); V: (k, d_in, r);
+    sigma: (n, r, r) full or (n, r) diag; cluster_of: (n,); ids: (T,).
+    """
+    cid = cluster_of[ids]
+    Vt = V[cid].astype(jnp.float32)                  # (T, d_in, r)
+    Ut = U[cid].astype(jnp.float32)                  # (T, d_out, r)
+    t = jnp.einsum("td,tdr->tr", x.astype(jnp.float32), Vt)
+    sig = sigma[ids].astype(jnp.float32)
+    if sig.ndim == 2:
+        t = t * sig
+    else:
+        t = jnp.einsum("tr,trq->tq", t, sig)
+    return jnp.einsum("tq,toq->to", t, Ut).astype(x.dtype)
+
+
+def sigma_bmm_ref(t: Array, sigma: Array, ids: Array) -> Array:
+    """t: (T, r) x sigma[ids]: per-token (r, r) matmul (JD-Full mid stage)."""
+    sig = sigma[ids].astype(jnp.float32)
+    return jnp.einsum("tr,trq->tq", t.astype(jnp.float32), sig).astype(t.dtype)
+
+
+def flash_decode_ref(q: Array, k: Array, v: Array,
+                     kv_len: Optional[Array] = None) -> Array:
+    """Decode attention oracle.  q: (B, H, hd); k/v: (B, S, Kv, hd)."""
+    B, H, hd = q.shape
+    S, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    qf = q.reshape(B, Kv, G, hd).astype(jnp.float32) * (hd ** -0.5)
+    logits = jnp.einsum("bkgh,bskh->bkgs", qf, k.astype(jnp.float32))
+    if kv_len is not None:
+        mask = jnp.arange(S)[None, :] < kv_len.reshape(-1, 1)
+        logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def group_tokens_by_adapter(ids: Array, n_adapters: int, tile: int
+                            ) -> Tuple[Array, Array, Array]:
+    """Host-side grouping: sort tokens by adapter and pad each group to a
+    multiple of `tile` (the TPU adaptation of Punica's SGMV — see DESIGN.md).
+
+    Returns (perm (T_pad,), tile_ids (T_pad//tile,), valid (T_pad,)):
+      - perm: indices into the original token array (arbitrary for padding)
+      - tile_ids: adapter id per tile (constant within a tile by construction)
+      - valid: 0/1 mask for padding slots.
+    Pure numpy-style; runs on host at batch-assembly time (not jitted).
+    """
+    import numpy as np
+    ids_np = np.asarray(ids)
+    order = np.argsort(ids_np, kind="stable")
+    sorted_ids = ids_np[order]
+    perm, valid, tile_ids = [], [], []
+    for a in range(n_adapters):
+        sel = order[sorted_ids == a]
+        if sel.size == 0:
+            continue
+        pad = (-sel.size) % tile
+        perm.extend(sel.tolist() + [int(sel[0])] * pad)
+        valid.extend([1] * sel.size + [0] * pad)
+        tile_ids.extend([a] * ((sel.size + pad) // tile))
+    return (jnp.asarray(perm, jnp.int32), jnp.asarray(tile_ids, jnp.int32),
+            jnp.asarray(valid, jnp.int32))

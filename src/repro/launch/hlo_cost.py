@@ -1,0 +1,254 @@
+"""Loop-aware cost extraction from post-SPMD HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, which
+undercounts scanned layer stacks by ~num_layers.  This module re-derives the
+three roofline inputs directly from the HLO text, recursively multiplying
+loop bodies by their trip counts:
+
+- dot FLOPs      : 2 * prod(out_shape) * prod(contracting dims)
+- HBM traffic    : sum of result bytes of top-level (fused) instructions
+                   (proxy: every fusion result is written once to HBM)
+- collective traffic per device : ring-model factors on result bytes
+
+Verified against analytic 6ND within a few percent on scanned transformers
+(see EXPERIMENTS.md §Dry-run methodology).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter, defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "s2": 1, "u2": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\).*?condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:fusion|call)\(.*?\).*?(?:calls|to_apply)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DOT_RE = re.compile(r"=\s*([a-z][a-z0-9]*\[[0-9,]*\])[^=]*\bdot\(")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dt: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n
+
+
+def _ring_factor(op: str, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    return {"all-gather": (g - 1) / g,
+            "reduce-scatter": float(g - 1),
+            "all-reduce": 2.0 * (g - 1) / g,
+            "all-to-all": (g - 1) / g,
+            "collective-permute": 1.0}.get(op, 1.0)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+_SKIP_OPS = ("parameter(", "constant(", "get-tuple-element(", "tuple(",
+             "bitcast(", "after-all(", "partition-id(", "replica-id(")
+
+
+@dataclasses.dataclass
+class CompCost:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_moved: float = 0.0
+    coll_counts: Counter = dataclasses.field(default_factory=Counter)
+    calls: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    # fusion call sites: (callee, result_bytes) — accounted in total() so a
+    # callee whose root is an in-place dynamic-update-slice can be discounted
+    fusion_results: List[Tuple[str, int]] = dataclasses.field(
+        default_factory=list)
+    whiles: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    max_const: int = 1
+    root_dus_update: Optional[int] = None   # update bytes if root is a DUS
+
+
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+
+
+def _parse_computations(text: str) -> Dict[str, CompCost]:
+    comps: Dict[str, CompCost] = {}
+    cur: Optional[CompCost] = None
+    symtab: Dict[str, str] = {}           # instr name -> dims string of result
+    dus_updates: Dict[str, int] = {}      # DUS instr name -> update bytes
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if line.endswith("{") and ("->" in line or line.startswith("ENTRY")):
+            m2 = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)", line)
+            name = m2.group(1) if m2 else f"comp{len(comps)}"
+            cur = CompCost()
+            comps[name] = cur
+            symtab = {}
+            dus_updates = {}
+            continue
+        if cur is None or line.startswith("}"):
+            continue
+        # record result (dtype, dims) for every instruction (operand lookup)
+        mi = _INSTR_RE.match(line)
+        if mi:
+            shapes = _SHAPE_RE.findall(mi.group(2).split("(")[0])
+            if len(shapes) == 1:
+                symtab[mi.group(1)] = shapes[0]
+        for m in _CONST_RE.finditer(line):
+            cur.max_const = max(cur.max_const, int(m.group(1)))
+        if any(op in line for op in _SKIP_OPS) and " dot(" not in line:
+            continue
+        mw = _WHILE_RE.search(line)
+        if mw:
+            cur.whiles.append((mw.group(1), mw.group(2)))
+            continue
+        mc = _CALL_RE.search(line)
+        if mc:
+            cur.calls.append(("call", mc.group(1)))
+            rb = sum(_shape_bytes(dt, dims) for dt, dims in
+                     _SHAPE_RE.findall(line.split("=", 1)[-1].split("(")[0]))
+            cur.fusion_results.append((mc.group(1), rb))
+            continue
+        # dot flops: 2 * out_elems * prod(lhs contracting dims)
+        md = _DOT_RE.search(line)
+        if md:
+            dt, dims = _SHAPE_RE.findall(md.group(1))[0]
+            out_elems = _shape_elems(dims)
+            k = 1
+            mctr = _CONTRACT_RE.search(line)
+            args = line.split("dot(", 1)[1].split(")")[0]
+            opnames = [a.strip().lstrip("%") for a in args.split(",")]
+            lhs_dims = None
+            if opnames:
+                inline = _SHAPE_RE.findall(args)
+                if inline:                      # operands printed with types
+                    lhs_dims = inline[0][1].split(",")
+                elif opnames[0] in symtab:
+                    lhs_dims = symtab[opnames[0]][1].split(",")
+            if mctr and lhs_dims:
+                for ci in mctr.group(1).split(","):
+                    if ci.strip() and int(ci) < len(lhs_dims):
+                        k *= int(lhs_dims[int(ci)] or 1)
+            cur.dot_flops += 2.0 * out_elems * k
+        # collectives
+        op_found = None
+        for c in _COLLECTIVES:
+            if re.search(r"\b" + c + r"(-start)?\(", line):
+                op_found = c
+                break
+        if op_found and not re.search(r"\b" + op_found + r"-done\(", line):
+            m2 = re.search(r"=\s*(.*?)\s+" + op_found, line)
+            if m2:
+                rb = sum(_shape_bytes(dt, dims)
+                         for dt, dims in _SHAPE_RE.findall(m2.group(1)))
+                g = _group_size(line)
+                cur.coll_moved += rb * _ring_factor(op_found, g)
+                cur.coll_counts[op_found] += 1
+        # hbm proxy: result bytes of this instruction.  In-place updates
+        # (dynamic-update-slice; scan carry/ys writes) only touch the update
+        # slice, not the whole buffer — count operand[1] instead.
+        eq = line.split("=", 1)
+        if len(eq) == 2:
+            rhs = eq[1].strip()
+            if "dynamic-update-slice(" in rhs:
+                args = rhs.split("dynamic-update-slice(", 1)[1].split(")")[0]
+                ops = [a.strip().lstrip("%") for a in args.split(",")]
+                upd = symtab.get(ops[1]) if len(ops) > 1 else None
+                if upd is not None:
+                    # update slice read + write only (in-place aliasing)
+                    ub = 2 * _shape_bytes(upd[0], upd[1])
+                    cur.hbm_bytes += ub
+                    if mi:
+                        dus_updates[mi.group(1)] = ub
+                    if line.startswith("ROOT"):
+                        cur.root_dus_update = ub
+                    continue
+            # ROOT convert(DUS): XLA:CPU round-trips scan-carry buffers
+            # through f32 converts; on TPU the DUS writes in place — count
+            # only the slice (judgement call, documented in EXPERIMENTS.md)
+            if line.startswith("ROOT") and "convert(" in rhs:
+                op0 = rhs.split("convert(", 1)[1].split(")")[0].strip().lstrip("%")
+                if op0 in dus_updates:
+                    cur.root_dus_update = dus_updates[op0]
+                    continue
+            shapes = _SHAPE_RE.findall(rhs.split("(")[0])
+            cur.hbm_bytes += sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+    return comps
+
+
+def analyze_hlo(text: str, entry: Optional[str] = None) -> Dict:
+    """Trip-count-aware totals.  Returns dict with flops/hbm/collective."""
+    comps = _parse_computations(text)
+    # entry: computation named like 'main...' or marked ENTRY (first with
+    # whiles as fallback)
+    if entry is None:
+        cands = [n for n in comps if n.startswith("main")]
+        entry = cands[0] if cands else next(iter(comps))
+
+    memo: Dict[str, Tuple[float, float, float, Counter]] = {}
+
+    def total(name: str, depth=0) -> Tuple[float, float, float, Counter]:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None or depth > 50:
+            return (0.0, 0.0, 0.0, Counter())
+        fl, hb, cm, cnt = c.dot_flops, c.hbm_bytes, c.coll_moved, Counter(c.coll_counts)
+        for _, callee in c.calls:
+            f2, h2, c2, n2 = total(callee, depth + 1)
+            fl += f2
+            # fused computations' internal results are NOT separate HBM
+            # traffic; only add collectives/flops from callees.
+            cm += c2
+            cnt += n2
+        for callee, rb in c.fusion_results:
+            cc = comps.get(callee)
+            if cc is not None and cc.root_dus_update is not None:
+                hb += cc.root_dus_update     # in-place update, not full buffer
+            else:
+                hb += rb
+        for cond, body in c.whiles:
+            trips = comps.get(cond, CompCost()).max_const
+            f2, h2, c2, n2 = total(body, depth + 1)
+            fl += trips * f2
+            hb += trips * h2
+            cm += trips * c2
+            cnt += Counter({k: v * trips for k, v in n2.items()})
+        memo[name] = (fl, hb, cm, cnt)
+        return memo[name]
+
+    fl, hb, cm, cnt = total(entry)
+    return {"dot_flops_per_dev": fl, "hbm_bytes_per_dev": hb,
+            "coll_bytes_per_dev": cm, "coll_counts": dict(cnt),
+            "entry": entry, "n_computations": len(comps)}

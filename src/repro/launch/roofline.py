@@ -1,0 +1,176 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+``cost_analysis()`` on an SPMD-partitioned module reports **per-device**
+FLOPs / bytes (verified against a known matmul); collective bytes are parsed
+from the post-SPMD HLO text with per-op ring-cost factors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes / s / chip
+ICI_BW = 50e9                # bytes / s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ring-model bytes moved per device, as a multiple of the RESULT bytes
+# (g = replica-group size)
+def _ring_factor(op: str, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if op == "all-gather":
+        return (g - 1) / g            # result is the gathered tensor
+    if op == "reduce-scatter":
+        return float(g - 1)           # result is the scattered piece
+    if op == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if op == "all-to-all":
+        return (g - 1) / g
+    if op == "collective-permute":
+        return 1.0
+    return 1.0
+
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+|pred)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _result_bytes(line: str) -> int:
+    """Sum bytes of all result shapes on an HLO instruction line (handles
+    tuple results; only looks left of the op name occurrence)."""
+    lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1]
+    # restrict to result type: text between '=' and the op name
+    m = re.search(r"=\s*(.*?)\s+(" + "|".join(_COLLECTIVES) + r")", line)
+    if not m:
+        return 0
+    out = 0
+    for dt, dims in _SHAPE_RE.findall(m.group(1)):
+        b = _DTYPE_BYTES.get(dt, 4)
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        out += n * b
+    return out
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:                              # replica_groups=[ngroups,gsize]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def collective_stats(hlo_text: str) -> Dict:
+    """Per-device collective traffic from post-SPMD HLO."""
+    counts: Counter = Counter()
+    bytes_moved = 0.0
+    bytes_result = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        op = None
+        for c in _COLLECTIVES:
+            if re.search(r"\b" + c + r"(-start|-done)?\(", stripped):
+                op = c
+                break
+        if op is None or stripped.startswith("ROOT tuple") or \
+                re.search(r"\b" + op + r"-done\(", stripped):
+            continue
+        rb = _result_bytes(stripped)
+        if rb == 0:
+            continue
+        g = _group_size(stripped)
+        counts[op] += 1
+        bytes_result += rb
+        bytes_moved += rb * _ring_factor(op, g)
+    return {"counts": dict(counts), "bytes_result": int(bytes_result),
+            "bytes_moved": float(bytes_moved)}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_dev: float
+    hbm_bytes_per_dev: float
+    coll_bytes_per_dev: float
+    n_devices: int
+    model_flops: float           # analytic useful FLOPs (global)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_dev / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        tot = self.flops_per_dev * self.n_devices
+        return self.model_flops / tot if tot else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the peak-compute roofline achieved if the step ran at
+        the max of the three terms: t_ideal_compute / t_bound."""
+        t_ideal = self.model_flops / (self.n_devices * PEAK_FLOPS)
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_ideal / t_bound if t_bound else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops_per_dev": self.flops_per_dev,
+            "hbm_bytes_per_dev": self.hbm_bytes_per_dev,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6ND train, 2ND prefill, 2·N_active·B decode
+    (+ KV attention read FLOPs for decode)."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence + attention over the cache
+    flops = 2.0 * n_active * shape.global_batch
+    if cfg.family in ("dense", "vlm", "moe", "audio"):
+        hd = cfg.resolved_head_dim
+        layers = cfg.num_layers
+        flops += (4.0 * cfg.num_heads * hd * shape.seq_len
+                  * shape.global_batch * layers)
+    return flops

@@ -1,0 +1,102 @@
+"""Serving launcher: multi-LoRA continuous-batching server (real model or
+cost-model simulation).
+
+  # paper-style throughput study (simulated clock, v5e cost model)
+  PYTHONPATH=src python -m repro.launch.serve --arch mistral-7b \\
+      --study 4,64,256,1024 --requests 500
+
+  # real reduced-model serving on CPU
+  PYTHONPATH=src python -m repro.launch.serve --arch mistral-7b --smoke \\
+      --real --adapters 8 --requests 24
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.scheduler import SchedulerConfig
+from repro.serving.simulator import WorkloadConfig, make_workload, \
+    run_throughput_study
+
+
+def run_real(cfg, n_adapters: int, n_requests: int, mode: str = "jd",
+             max_batch: int = 8, seed: int = 0) -> dict:
+    """Real execution path: random adapters (paper §6.4 simulates random
+    LoRAs for throughput), real prefill/decode with batched adapter math."""
+    from repro.models import transformer as tf
+    from repro.models.param import init_params
+    from repro.serving.real_executor import RealModelExecutor
+
+    defs = tf.model_defs(cfg)
+    params = init_params(defs, jax.random.PRNGKey(seed))
+    key = jax.random.PRNGKey(seed + 1)
+    r = cfg.lora.rank
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    L = cfg.num_layers
+
+    bundles = {"layers": {}}
+    dims = {"q": (d, cfg.num_heads * hd), "k": (d, cfg.num_kv_heads * hd),
+            "v": (d, cfg.num_kv_heads * hd)}
+    for tname, (di, do) in dims.items():
+        ka, kb = jax.random.split(jax.random.fold_in(key, hash(tname) % 97))
+        if mode == "lora":
+            bundles["layers"][tname] = {
+                "A": jax.random.normal(ka, (L, n_adapters, r, di),
+                                       jnp.bfloat16) * 0.02,
+                "B": jax.random.normal(kb, (L, n_adapters, do, r),
+                                       jnp.bfloat16) * 0.02}
+        else:
+            k_cl = 1
+            bundles["layers"][tname] = {
+                "U": jax.random.normal(ka, (L, k_cl, do, r), jnp.bfloat16) * 0.02,
+                "V": jax.random.normal(kb, (L, k_cl, di, r), jnp.bfloat16) * 0.02,
+                "sigma": jax.random.normal(ka, (L, n_adapters, r, r),
+                                           jnp.bfloat16) * 0.1,
+                "cluster_of": jnp.zeros((L, n_adapters), jnp.int32)}
+
+    s_max = 160
+    ex = RealModelExecutor(cfg, params, bundles, mode, max_batch, s_max)
+    eng = ServingEngine(EngineConfig(
+        scheduler=SchedulerConfig(max_batch=max_batch),
+        adapter_budget_bytes=1e12, mode="lora"), ex)
+    wl = WorkloadConfig(n_requests=n_requests, n_adapters=n_adapters,
+                        prompt_len_mean=24, prompt_len_std=4, new_tokens=8)
+    eng.on_finish = lambda req: ex.release(req.rid)
+    eng.submit(make_workload(wl))
+    stats = eng.run()
+    return stats.to_dict()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--study", default=None,
+                    help="comma list of adapter counts for the Fig-1 study")
+    ap.add_argument("--requests", type=int, default=500)
+    ap.add_argument("--real", action="store_true")
+    ap.add_argument("--adapters", type=int, default=8)
+    ap.add_argument("--mode", default="jd", choices=["jd", "lora"])
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.study:
+        ns = [int(x) for x in args.study.split(",")]
+        rows = run_throughput_study(
+            cfg, ns, WorkloadConfig(n_requests=args.requests))
+        for r in rows:
+            print(json.dumps(r, indent=None, default=str))
+    elif args.real:
+        out = run_real(cfg, args.adapters, args.requests, args.mode)
+        print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

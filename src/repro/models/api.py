@@ -1,0 +1,109 @@
+"""Public model API: batch specs per (arch x shape) cell and step functions.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of that cell (weak-type-correct, shardable, no allocation) —
+used by the multi-pod dry-run and the smoke tests alike.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tf
+from repro.models.param import abstract_params, init_params
+
+Array = jax.Array
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the step input batch of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+
+    def tok(b, s):
+        return jax.ShapeDtypeStruct((b, s), i32)
+
+    if shape.kind == "train":
+        if cfg.family == "audio":
+            return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), bf16),
+                    "tokens": tok(B, S), "targets": tok(B, S)}
+        if cfg.family == "vlm":
+            npch = cfg.vlm.num_patches
+            return {"tokens": tok(B, S - npch),
+                    "patches": jax.ShapeDtypeStruct((B, npch, cfg.d_model), bf16),
+                    "targets": tok(B, S - npch)}
+        return {"tokens": tok(B, S), "targets": tok(B, S)}
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), bf16),
+                    "tokens": tok(B, S)}
+        if cfg.family == "vlm":
+            npch = cfg.vlm.num_patches
+            return {"tokens": tok(B, S - npch),
+                    "patches": jax.ShapeDtypeStruct((B, npch, cfg.d_model), bf16)}
+        return {"tokens": tok(B, S)}
+    # decode: one new token against a cache of seq_len
+    return {"tokens": tok(B, 1)}
+
+
+def cache_struct(cfg: ModelConfig, shape: ShapeConfig,
+                 abstract: bool = True) -> Optional[Dict]:
+    if shape.kind == "train":
+        return None
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = S if cfg.family == "audio" else 0
+    return tf.init_cache(cfg, B, S, enc_len=enc_len, abstract=abstract)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """All step inputs (batch + cache when applicable) as structs."""
+    out = {"batch": batch_struct(cfg, shape)}
+    c = cache_struct(cfg, shape)
+    if c is not None:
+        out["cache"] = c
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step functions (model-only; training step w/ optimizer lives in training/)
+# ---------------------------------------------------------------------------
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, batch, lora_params=None, lora_ctx_proto=None):
+        return tf.lm_loss(params, batch, cfg, lora_params=lora_params,
+                          lora_ctx_proto=lora_ctx_proto)
+    return loss_fn
+
+
+def make_prefill_fn(cfg: ModelConfig):
+    def prefill_fn(params, batch, cache, lora_params=None, lora_ctx_proto=None):
+        return tf.prefill(params, batch, cfg, cache, lora_params=lora_params,
+                          lora_ctx_proto=lora_ctx_proto)
+    return prefill_fn
+
+
+def make_decode_fn(cfg: ModelConfig):
+    def decode_fn(params, batch, cache, lora_params=None, lora_ctx_proto=None):
+        return tf.decode_step(params, batch["tokens"], cfg, cache,
+                              lora_params=lora_params,
+                              lora_ctx_proto=lora_ctx_proto)
+    return decode_fn
+
+
+def step_fn_for(cfg: ModelConfig, shape: ShapeConfig, with_opt: bool = True):
+    """The function a dry-run lowers for this cell.
+
+    train cells lower a full train_step (fwd+bwd+AdamW update) built by
+    repro.training; prefill/decode cells lower the serve step."""
+    if shape.kind == "train":
+        from repro.training.step import make_train_step
+        return make_train_step(cfg, with_opt=with_opt)
+    if shape.kind == "prefill":
+        return make_prefill_fn(cfg)
+    return make_decode_fn(cfg)

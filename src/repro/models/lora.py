@@ -1,0 +1,104 @@
+"""LoRA application inside model layers — three modes:
+
+- ``single``:  one adapter, training / single-tenant serving.
+- ``batched``: uncompressed multi-LoRA serving; per-sequence adapter ids
+  select (A_i, B_i) from stacked banks (the vLLM-multi-LoRA baseline).
+- ``jd``:      compressed serving; shared (possibly clustered) bases U, V +
+  per-adapter Sigma (the paper's method).
+
+The jnp paths here gather per-*sequence* weights (ids are (B,)), which is
+cheap.  The serving engine's flattened token path uses the Pallas kernels in
+:mod:`repro.kernels` instead (per-token ids, tile-grouped).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamDef
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class LoRAContext:
+    mode: str                       # single | batched | jd
+    params: Dict[str, Any]          # target -> arrays
+    ids: Optional[Array] = None     # (B,) adapter id per sequence
+    scaling: float = 1.0
+
+
+jax.tree_util.register_dataclass(
+    LoRAContext, data_fields=["params", "ids"], meta_fields=["mode", "scaling"])
+
+
+def single_lora_defs(d_in: int, d_out: int, rank: int) -> Dict:
+    return {
+        "a": ParamDef((rank, d_in), ("rank", "d_model"), scale=0.02),
+        "b": ParamDef((d_out, rank), (None, "rank"), init="zeros"),
+    }
+
+
+def target_dims(cfg, target: str) -> tuple:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, Kv = cfg.num_heads, cfg.num_kv_heads
+    if target in ("q", "xq"):
+        return d, H * hd
+    if target in ("k", "v", "xk", "xv"):
+        return d, Kv * hd
+    if target == "o":
+        return H * hd, d
+    if target == "ssm_in":
+        s = cfg.ssm
+        di = s.d_inner(d)
+        return d, 2 * di + 2 * s.n_groups * s.d_state + s.n_heads(d)
+    if target == "ssm_out":
+        return cfg.ssm.d_inner(d), d
+    raise ValueError(target)
+
+
+def lora_layer_defs(cfg, targets=None) -> Dict:
+    targets = targets or cfg.lora.targets
+    return {t: single_lora_defs(*target_dims(cfg, t), cfg.lora.rank)
+            for t in targets}
+
+
+def apply(ctx: Optional[LoRAContext], target: str, x: Array, y: Array) -> Array:
+    """y + scaled LoRA delta for `target`; no-op when absent."""
+    if ctx is None or ctx.params is None or target not in ctx.params:
+        return y
+    p = ctx.params[target]
+    if ctx.mode == "single":
+        t = jnp.einsum("bsd,rd->bsr", x, p["a"].astype(x.dtype))
+        delta = jnp.einsum("bsr,or->bso", t, p["b"].astype(x.dtype))
+    elif ctx.mode == "batched":
+        A = p["A"][ctx.ids].astype(x.dtype)        # (B, r, d_in)
+        Bm = p["B"][ctx.ids].astype(x.dtype)       # (B, d_out, r)
+        t = jnp.einsum("bsd,brd->bsr", x, A)
+        delta = jnp.einsum("bsr,bor->bso", t, Bm)
+    elif ctx.mode == "jd":
+        cid = p["cluster_of"][ctx.ids]             # (B,)
+        V = p["V"][cid].astype(x.dtype)            # (B, d_in, r)
+        U = p["U"][cid].astype(x.dtype)            # (B, d_out, r)
+        sig = p["sigma"][ctx.ids].astype(x.dtype)  # (B, r, r) or (B, r)
+        t = jnp.einsum("bsd,bdr->bsr", x, V)
+        if sig.ndim == 2:                          # JD-Diag
+            t = t * sig[:, None, :]
+        else:                                      # JD-Full
+            t = jnp.einsum("bsr,brq->bsq", t, sig)
+        delta = jnp.einsum("bsr,bor->bso", t, U)
+    else:
+        raise ValueError(ctx.mode)
+    delta = (ctx.scaling * delta.astype(jnp.float32)).astype(y.dtype)
+    return y + delta.reshape(y.shape)
+
+
+def layer_slice(ctx: Optional[LoRAContext], layer_params) -> Optional[LoRAContext]:
+    """Rebind a context to one layer's (scanned) adapter params."""
+    if ctx is None or layer_params is None:
+        return None
+    return LoRAContext(mode=ctx.mode, params=layer_params, ids=ctx.ids,
+                       scaling=ctx.scaling)

@@ -1,0 +1,246 @@
+"""Mamba2 / SSD (state-space duality) block, TPU-adapted.
+
+The GPU reference implementation is a fused CUDA scan; on TPU we use the
+*chunked* SSD formulation (arXiv:2405.21060 §6): intra-chunk terms are plain
+matmuls (MXU-friendly), inter-chunk recurrence is a short ``lax.scan`` over
+chunk states.  Decode is an O(1) recurrent state update — the "KV cache of
+seq_len" for SSM shapes is this fixed-size state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.param import ParamDef
+from repro.models import lora as lora_mod
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class SSMCache:
+    """conv_state: (B, d_conv-1, di+2GN); state: (B, H, N, P); index: ()."""
+    conv: Array
+    state: Array
+    index: Array
+
+    @staticmethod
+    def zeros(batch, cfg: ModelConfig, dtype=jnp.bfloat16) -> "SSMCache":
+        s = cfg.ssm
+        di = s.d_inner(cfg.d_model)
+        H = s.n_heads(cfg.d_model)
+        width = di + 2 * s.n_groups * s.d_state
+        return SSMCache(
+            conv=jnp.zeros((batch, s.d_conv - 1, width), dtype),
+            state=jnp.zeros((batch, H, s.d_state, s.head_dim), jnp.float32),
+            index=jnp.zeros((), jnp.int32))
+
+    @staticmethod
+    def abstract(batch, cfg: ModelConfig, dtype=jnp.bfloat16) -> "SSMCache":
+        s = cfg.ssm
+        di = s.d_inner(cfg.d_model)
+        H = s.n_heads(cfg.d_model)
+        width = di + 2 * s.n_groups * s.d_state
+        return SSMCache(
+            conv=jax.ShapeDtypeStruct((batch, s.d_conv - 1, width), dtype),
+            state=jax.ShapeDtypeStruct((batch, H, s.d_state, s.head_dim),
+                                       jnp.float32),
+            index=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+jax.tree_util.register_dataclass(SSMCache, ["conv", "state", "index"], [])
+
+
+def ssm_defs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    di = s.d_inner(d)
+    GN = s.n_groups * s.d_state
+    H = s.n_heads(d)
+    return {
+        "wz": ParamDef((d, di), ("d_model", "d_ff")),
+        "wx": ParamDef((d, di), ("d_model", "d_ff")),
+        "wB": ParamDef((d, GN), ("d_model", "ssm_state")),
+        "wC": ParamDef((d, GN), ("d_model", "ssm_state")),
+        "wdt": ParamDef((d, H), ("d_model", "ssm_heads")),
+        "dt_bias": ParamDef((H,), ("ssm_heads",), init="zeros"),
+        "A_log": ParamDef((H,), ("ssm_heads",), init="zeros"),
+        "D": ParamDef((H,), ("ssm_heads",), init="ones"),
+        "conv_w": ParamDef((s.d_conv, di + 2 * GN), ("conv_k", "d_ff"),
+                           scale=0.5),
+        "norm": ParamDef((di,), ("d_ff",), init="ones"),
+        "out_proj": ParamDef((di, d), ("d_ff", "d_model")),
+    }
+
+
+def _causal_conv(xbc: Array, w: Array, conv_state: Optional[Array] = None
+                 ) -> Tuple[Array, Array]:
+    """Depthwise causal conv1d.  xbc: (B, S, W); w: (k, W).
+
+    Returns (out (B,S,W), new_conv_state (B, k-1, W))."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)           # (B, S+k-1, W)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else xp[:, :0, :]
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xbc.dtype), new_state
+
+
+def _project(p: Dict, x: Array, cfg: ModelConfig, lora_ctx):
+    """x: (B,S,d) -> z (B,S,di), xbc (B,S,di+2GN), dt (B,S,H)."""
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xs = jnp.einsum("bsd,de->bse", x, p["wx"])
+    if lora_ctx is not None:
+        xs = lora_mod.apply(lora_ctx, "ssm_in", x, xs)
+    bb = jnp.einsum("bsd,de->bse", x, p["wB"])
+    cc = jnp.einsum("bsd,de->bse", x, p["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32))
+    xbc = jnp.concatenate([xs, bb, cc], axis=-1)
+    return z, xbc, dt
+
+
+def _split_xbc(xbc: Array, cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    GN = s.n_groups * s.d_state
+    xs = xbc[..., :di]
+    bb = xbc[..., di:di + GN]
+    cc = xbc[..., di + GN:]
+    B_, S_ = xbc.shape[:2]
+    H = s.n_heads(cfg.d_model)
+    xh = xs.reshape(B_, S_, H, s.head_dim)
+    bg = bb.reshape(B_, S_, s.n_groups, s.d_state)
+    cg = cc.reshape(B_, S_, s.n_groups, s.d_state)
+    return xh, bg, cg
+
+
+def ssd_scan(xh: Array, bg: Array, cg: Array, dt: Array, A: Array,
+             chunk: int, init_state: Optional[Array] = None
+             ) -> Tuple[Array, Array]:
+    """Chunked SSD.  xh: (B,S,H,P); bg/cg: (B,S,G,N); dt: (B,S,H); A: (H,) < 0.
+
+    Returns (y (B,S,H,P) fp32, final_state (B,H,N,P) fp32)."""
+    B, S, H, P = xh.shape
+    G, N = bg.shape[2], bg.shape[3]
+    hpg = H // G
+    Q = min(chunk, S)
+    if S % Q:
+        # pad with dt = 0 steps: decay factor exp(0) = 1 and zero state
+        # contribution, so padding is exact; slice y back afterwards.
+        pad = Q - S % Q
+        y, final = ssd_scan(
+            jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(bg, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(cg, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(dt, ((0, 0), (0, pad), (0, 0))),
+            A, chunk, init_state)
+        return y[:, :S], final
+    nc = S // Q
+    # heads laid out as (G, hpg): head h belongs to group h // hpg
+    xf = xh.astype(jnp.float32).reshape(B, nc, Q, G, hpg, P)
+    bf = bg.astype(jnp.float32).reshape(B, nc, Q, G, N)
+    cf = cg.astype(jnp.float32).reshape(B, nc, Q, G, N)
+    dtc = dt.reshape(B, nc, Q, G, hpg)
+    dA = dtc * A.reshape(G, hpg)[None, None, None]       # (B,nc,Q,G,hpg) <= 0
+    cum = jnp.cumsum(dA, axis=2)                         # inclusive
+    # intra-chunk: M[...,i,j] = C_i.B_j * exp(cum_i - cum_j) * dt_j  (i>=j)
+    cb = jnp.einsum("bcign,bcjgn->bcgij", cf, bf)        # (B,nc,G,Q,Q)
+    ii = jnp.arange(Q)
+    # decay[b,c,g,h,i,j] = exp(cum_i - cum_j), lower-triangular
+    cum_h = cum.transpose(0, 1, 3, 4, 2)                 # (B,nc,G,hpg,Q)
+    decay = jnp.exp(jnp.clip(cum_h[..., :, None] - cum_h[..., None, :],
+                             -60.0, 0.0))
+    mask = (ii[:, None] >= ii[None, :])[None, None, None, None]
+    M = cb[:, :, :, None] * jnp.where(mask, decay, 0.0) \
+        * dtc.transpose(0, 1, 3, 4, 2)[..., None, :]     # (B,nc,G,hpg,Q,Q)
+    y_intra = jnp.einsum("bcghij,bcjghp->bcighp", M, xf)
+    # chunk state: sum_j exp(cum_last - cum_j) dt_j B_j (x) x_j
+    seg = jnp.exp(jnp.clip(cum[:, :, -1:] - cum, -60.0, 0.0)) * dtc  # (B,nc,Q,G,hpg)
+    bx = jnp.einsum("bcjgn,bcjgh,bcjghp->bcghnp", bf, seg, xf)
+    total_decay = jnp.exp(jnp.clip(cum[:, :, -1], -60.0, 0.0))       # (B,nc,G,hpg)
+
+    def chunk_step(state, inp):
+        bx_c, td_c = inp                                 # (B,G,hpg,N,P), (B,G,hpg)
+        new = state * td_c[..., None, None] + bx_c
+        return new, state                                # emit state BEFORE chunk
+
+    s0 = (jnp.zeros((B, G, hpg, N, P), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32).reshape(B, G, hpg, N, P))
+    final, prev_states = jax.lax.scan(
+        chunk_step, s0,
+        (bx.transpose(1, 0, 2, 3, 4, 5), total_decay.transpose(1, 0, 2, 3)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # (B,nc,G,hpg,N,P)
+    y_inter = jnp.einsum("bcign,bcghnp,bcigh->bcighp",
+                         cf, prev_states,
+                         jnp.exp(jnp.clip(cum, -60.0, 0.0)))
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y, final.reshape(B, H, N, P)
+
+
+def ssd_decode_step(xh, bg, cg, dt, A, state):
+    """Single-token recurrence.  xh: (B,1,H,P) etc.  state: (B,H,N,P)."""
+    B, _, H, P = xh.shape
+    G = bg.shape[2]
+    hpg = H // G
+    xf = xh[:, 0].astype(jnp.float32)                    # (B,H,P)
+    bf = jnp.repeat(bg[:, 0].astype(jnp.float32), hpg, axis=1)  # (B,H,N)
+    cf = jnp.repeat(cg[:, 0].astype(jnp.float32), hpg, axis=1)
+    dtf = dt[:, 0]                                       # (B,H)
+    decay = jnp.exp(jnp.clip(dtf * A[None, :], -60.0, 0.0))
+    new_state = state * decay[:, :, None, None] + \
+        jnp.einsum("bhn,bh,bhp->bhnp", bf, dtf, xf)
+    y = jnp.einsum("bhn,bhnp->bhp", cf, new_state)
+    return y[:, None], new_state                         # (B,1,H,P)
+
+
+def ssm_block_fwd(p: Dict, x: Array, cfg: ModelConfig, *,
+                  mode: str = "train",
+                  cache: Optional[SSMCache] = None,
+                  lora_ctx=None) -> Tuple[Array, Optional[SSMCache]]:
+    """Full Mamba2 block: proj -> causal conv -> SSD -> gated norm -> out."""
+    B, S, _ = x.shape
+    s = cfg.ssm
+    H = s.n_heads(cfg.d_model)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    z, xbc, dt = _project(p, x, cfg, lora_ctx)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None
+        full = jnp.concatenate([cache.conv.astype(xbc.dtype), xbc], axis=1)
+        conv_out = jnp.einsum("bkw,kw->bw", full[:, -s.d_conv:, :], p["conv_w"])
+        conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(xbc.dtype)[:, None]
+        xh, bg, cg = _split_xbc(conv_out, cfg)
+        y, new_state = ssd_decode_step(xh, bg, cg, dt, A, cache.state)
+        new_cache = SSMCache(conv=full[:, -(s.d_conv - 1):, :].astype(cache.conv.dtype),
+                             state=new_state, index=cache.index + 1)
+    else:
+        conv_out, conv_state = _causal_conv(xbc, p["conv_w"])
+        xh, bg, cg = _split_xbc(conv_out, cfg)
+        xh = constrain(xh, "batch", "seq", "ssm_heads", None)
+        y, final_state = ssd_scan(xh, bg, cg, dt, A, s.chunk)
+        if mode == "prefill":
+            assert cache is not None
+            new_cache = SSMCache(conv=conv_state.astype(cache.conv.dtype),
+                                 state=final_state,
+                                 index=jnp.asarray(S, jnp.int32))
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, -1).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    from repro.models.layers import rms_norm
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    y = constrain(y, "batch", "seq", "d_ff")
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    if lora_ctx is not None:
+        out = lora_mod.apply(lora_ctx, "ssm_out", y, out)
+    return constrain(out, "batch", "seq", "d_model"), new_cache

@@ -1,0 +1,109 @@
+"""Accelerator-memory adapter cache: HBM budget, LRU eviction, DMA cost model.
+
+Models the paper's core serving bottleneck: with many adapters, the working
+set exceeds the device budget and adapters are continuously loaded/offloaded
+(host DRAM -> HBM over PCIe on TPU hosts).  Compressed collections pin the
+shared bases (U_j, V_j) once and stream only tiny Sigma_i on miss — usually
+the whole Sigma set fits, eliminating swaps entirely.
+
+Transfers are modeled non-blocking (vLLM-style): a single copy engine whose
+busy-until time overlaps compute; a step stalls only if it needs an adapter
+whose transfer hasn't completed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, Iterable, Optional, Set
+
+
+@dataclasses.dataclass
+class DMAModel:
+    bandwidth: float = 16e9          # bytes/s host->device (PCIe gen4-ish)
+    latency: float = 50e-6           # per-transfer fixed cost
+
+
+@dataclasses.dataclass
+class CacheConfig:
+    capacity_bytes: float            # HBM budget for adapter weights
+    dma: DMAModel = dataclasses.field(default_factory=DMAModel)
+
+
+class AdapterCache:
+    """LRU over adapter entries + pinned shared entries."""
+
+    def __init__(self, cfg: CacheConfig):
+        self.cfg = cfg
+        self._resident: "OrderedDict[int, int]" = OrderedDict()  # id -> bytes
+        self._pinned_bytes = 0
+        self._used = 0
+        self.copy_engine_free_at = 0.0
+        self.n_swaps = 0
+        self.bytes_swapped = 0
+
+    # -- sizing ------------------------------------------------------------
+    @property
+    def used_bytes(self) -> int:
+        return self._used + self._pinned_bytes
+
+    @property
+    def capacity(self) -> float:
+        return self.cfg.capacity_bytes
+
+    def fits(self, n_more: int) -> bool:
+        return self.used_bytes + n_more <= self.capacity
+
+    # -- pinned shared state (compressed bases) ----------------------------
+    def pin_shared(self, nbytes: int) -> None:
+        if self._pinned_bytes + self._used + nbytes > self.capacity:
+            raise MemoryError(
+                f"shared bases ({nbytes/1e6:.1f} MB) exceed adapter budget "
+                f"({self.capacity/1e6:.1f} MB)")
+        self._pinned_bytes += nbytes
+
+    # -- lookup / load ------------------------------------------------------
+    def is_resident(self, aid: int) -> bool:
+        return aid in self._resident
+
+    def touch(self, aid: int) -> None:
+        if aid in self._resident:
+            self._resident.move_to_end(aid)
+
+    def ensure(self, aid: int, nbytes: int, now: float) -> float:
+        """Make `aid` resident; returns the time the adapter is usable.
+
+        Eviction is free (drop); transfer is queued on the copy engine and
+        overlaps compute — the caller stalls only until the returned time."""
+        if aid in self._resident:
+            self._resident.move_to_end(aid)
+            return now
+        # evict LRU until it fits
+        while self._used + self._pinned_bytes + nbytes > self.capacity \
+                and self._resident:
+            _, b = self._resident.popitem(last=False)
+            self._used -= b
+        if self._used + self._pinned_bytes + nbytes > self.capacity:
+            raise MemoryError("adapter larger than total budget")
+        start = max(now, self.copy_engine_free_at)
+        t_done = start + self.cfg.dma.latency + nbytes / self.cfg.dma.bandwidth
+        self.copy_engine_free_at = t_done
+        self._resident[aid] = nbytes
+        self._used += nbytes
+        self.n_swaps += 1
+        self.bytes_swapped += nbytes
+        return t_done
+
+    def ensure_many(self, pairs: Iterable[tuple], now: float) -> float:
+        t = now
+        for aid, nbytes in pairs:
+            t = max(t, self.ensure(aid, nbytes, now))
+        return t
+
+    def prefetch(self, aid: int, nbytes: int, now: float) -> None:
+        """Opportunistic background load (does not stall the caller)."""
+        if not self.is_resident(aid):
+            self.ensure(aid, nbytes, now)
+
+    @property
+    def resident_ids(self) -> Set[int]:
+        return set(self._resident)

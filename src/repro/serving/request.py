@@ -1,0 +1,62 @@
+"""Serving request/response types."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    adapter_id: int
+    prompt_len: int
+    max_new_tokens: int
+    arrival_time: float = 0.0
+    # runtime state
+    generated: int = 0
+    start_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    prefilled: bool = False
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.max_new_tokens
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival_time
+
+
+@dataclasses.dataclass
+class ServeStats:
+    n_requests: int = 0
+    n_tokens: int = 0
+    wall_time: float = 0.0
+    swap_time: float = 0.0
+    compute_time: float = 0.0
+    n_swaps: int = 0
+    sum_latency: float = 0.0
+
+    @property
+    def throughput_rps(self) -> float:
+        return self.n_requests / self.wall_time if self.wall_time else 0.0
+
+    @property
+    def throughput_tps(self) -> float:
+        return self.n_tokens / self.wall_time if self.wall_time else 0.0
+
+    @property
+    def mean_latency(self) -> float:
+        return self.sum_latency / self.n_requests if self.n_requests else 0.0
+
+    def to_dict(self):
+        return {
+            "n_requests": self.n_requests, "n_tokens": self.n_tokens,
+            "wall_time_s": self.wall_time, "swap_time_s": self.swap_time,
+            "compute_time_s": self.compute_time, "n_swaps": self.n_swaps,
+            "throughput_rps": self.throughput_rps,
+            "throughput_tps": self.throughput_tps,
+            "mean_latency_s": self.mean_latency,
+        }

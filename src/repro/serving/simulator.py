@@ -1,0 +1,126 @@
+"""Workload generation + the paper's throughput study driver (Figs. 1 & 4).
+
+Replicates §6.4's setup in v5e terms: N unique rank-16 LoRAs, asynchronous
+request arrivals, inputs assigned to adapters uniformly at random, ten
+generated tokens per request; memory-matched baseline (Appendix F): the
+uncompressed engine gets an adapter budget equal to what the compressed
+configuration consumes (shared bases + all Sigmas).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.engine import (CostModelExecutor, EngineConfig,
+                                  ModelFootprint, ServingEngine,
+                                  ServingHardware)
+from repro.serving.request import Request
+from repro.serving.scheduler import SchedulerConfig
+
+
+@dataclasses.dataclass
+class WorkloadConfig:
+    n_requests: int = 1000
+    n_adapters: int = 64
+    prompt_len_mean: int = 128       # sonnet-ish prompts
+    prompt_len_std: int = 32
+    new_tokens: int = 10             # paper: ten tokens per request
+    arrival_rate: float = 0.0        # req/s Poisson; 0 = all at t=0
+    seed: int = 0
+
+
+def make_workload(cfg: WorkloadConfig) -> List[Request]:
+    rng = np.random.default_rng(cfg.seed)
+    t = 0.0
+    out = []
+    for i in range(cfg.n_requests):
+        if cfg.arrival_rate > 0:
+            t += rng.exponential(1.0 / cfg.arrival_rate)
+        plen = int(np.clip(rng.normal(cfg.prompt_len_mean, cfg.prompt_len_std),
+                           16, 4 * cfg.prompt_len_mean))
+        out.append(Request(rid=i,
+                           adapter_id=int(rng.integers(cfg.n_adapters)),
+                           prompt_len=plen, max_new_tokens=cfg.new_tokens,
+                           arrival_time=t))
+    return out
+
+
+# paper Appendix F: compression setting per collection size
+PAPER_SETTINGS = {
+    4: dict(rank=16, clusters=1), 8: dict(rank=16, clusters=1),
+    16: dict(rank=32, clusters=1), 32: dict(rank=64, clusters=1),
+    64: dict(rank=64, clusters=1), 128: dict(rank=16, clusters=7),
+    256: dict(rank=16, clusters=10), 512: dict(rank=16, clusters=25),
+    1024: dict(rank=16, clusters=25),
+}
+
+
+def compression_setting(n_adapters: int) -> Dict:
+    keys = sorted(PAPER_SETTINGS)
+    for k in keys:
+        if n_adapters <= k:
+            return PAPER_SETTINGS[k]
+    return PAPER_SETTINGS[keys[-1]]
+
+
+def run_throughput_study(model_cfg, n_adapters_list: List[int],
+                         workload: Optional[WorkloadConfig] = None,
+                         hw: Optional[ServingHardware] = None,
+                         max_batch: int = 32,
+                         cluster_assign_seed: int = 0) -> List[Dict]:
+    """Compressed vs uncompressed vs single-LoRA throughput across N."""
+    hw = hw or ServingHardware()
+    rows = []
+    for n in n_adapters_list:
+        wl = dataclasses.replace(workload or WorkloadConfig(), n_adapters=n)
+        setting = compression_setting(n)
+        rng = np.random.default_rng(cluster_assign_seed)
+        cluster_of = {a: int(rng.integers(setting["clusters"]))
+                      for a in range(n)}
+
+        fp_jd = ModelFootprint.from_config(model_cfg, jd_rank=setting["rank"],
+                                           n_clusters=setting["clusters"])
+        fp_lora = ModelFootprint.from_config(model_cfg)
+
+        # memory matching (App F): baseline budget = compressed footprint
+        jd_total = (fp_jd.jd_shared_bytes_per_cluster * setting["clusters"]
+                    + n * fp_jd.jd_sigma_bytes_per_adapter)
+        budget = max(jd_total, 2 * fp_lora.lora_bytes_per_adapter)
+
+        results = {}
+        for mode, fp in (("jd", fp_jd), ("lora", fp_lora)):
+            ex = CostModelExecutor(hw, fp, mode, cluster_of)
+            eng = ServingEngine(
+                EngineConfig(scheduler=SchedulerConfig(max_batch=max_batch),
+                             adapter_budget_bytes=budget, mode=mode),
+                ex, cluster_of)
+            eng.submit(make_workload(wl))
+            stats = eng.run()
+            results[mode] = stats.to_dict()
+
+        # single-LoRA reference (merged into base: no adapter overhead)
+        fp_single = ModelFootprint.from_config(model_cfg)
+        fp_single = dataclasses.replace(fp_single, lora_bytes_per_adapter=0)
+        ex1 = CostModelExecutor(hw, fp_single, "lora", {})
+        wl1 = dataclasses.replace(wl, n_adapters=1)
+        eng1 = ServingEngine(
+            EngineConfig(scheduler=SchedulerConfig(max_batch=max_batch),
+                         adapter_budget_bytes=budget, mode="lora"), ex1, {})
+        eng1.submit(make_workload(wl1))
+        results["single"] = eng1.run().to_dict()
+
+        rows.append({
+            "n_adapters": n, "setting": setting,
+            "budget_bytes": budget,
+            "jd": results["jd"], "lora": results["lora"],
+            "single": results["single"],
+            "throughput_ratio_jd_vs_lora":
+                results["jd"]["throughput_rps"]
+                / max(results["lora"]["throughput_rps"], 1e-9),
+            "jd_frac_of_single":
+                results["jd"]["throughput_rps"]
+                / max(results["single"]["throughput_rps"], 1e-9),
+        })
+    return rows

@@ -1,0 +1,105 @@
+"""Train-step builders: full fine-tuning and LoRA-only fine-tuning, with
+microbatched gradient accumulation (scan) for the 100B+ cells."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tf
+from repro.models.lora import LoRAContext
+from repro.training.optimizer import AdamWConfig, adamw_update
+
+Array = jax.Array
+
+
+def _microbatch_grads(loss_fn, params, batch, n_micro: int):
+    """Gradient accumulation over n_micro microbatches via lax.scan."""
+    if n_micro <= 1:
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        return loss, grads
+
+    def reshape(x):
+        b = x.shape[0]
+        return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+
+    mb = jax.tree.map(reshape, batch)
+
+    def body(carry, mbatch):
+        loss_acc, grads_acc = carry
+        loss, grads = jax.value_and_grad(loss_fn)(params, mbatch)
+        grads_acc = jax.tree.map(
+            lambda a, g: a + g.astype(jnp.float32) / n_micro, grads_acc, grads)
+        return (loss_acc + loss / n_micro, grads_acc), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss, grads), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), zeros), mb)
+    return loss, grads
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None,
+                    n_micro: int = 1, with_opt: bool = True):
+    """Full-model train step: loss -> grads -> AdamW.
+
+    signature: step(params, opt_state, batch) -> (params, opt_state, metrics)
+    (with_opt=False: step(params, batch) -> (loss, grads), for tests)."""
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def loss_fn(params, batch):
+        return tf.lm_loss(params, batch, cfg)
+
+    if not with_opt:
+        def grad_step(params, batch):
+            return _microbatch_grads(loss_fn, params, batch, n_micro)
+        return grad_step
+
+    def step(params, opt_state, batch):
+        loss, grads = _microbatch_grads(loss_fn, params, batch, n_micro)
+        params, opt_state, metrics = adamw_update(opt_cfg, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_lora_train_step(cfg: ModelConfig,
+                         opt_cfg: Optional[AdamWConfig] = None,
+                         n_micro: int = 1):
+    """LoRA fine-tuning: base params frozen, gradients over adapters only.
+
+    signature: step(base_params, lora_params, opt_state, batch)
+               -> (lora_params, opt_state, metrics)"""
+    opt_cfg = opt_cfg or AdamWConfig(lr=1e-3, weight_decay=0.0)
+    scaling = cfg.lora.alpha / cfg.lora.rank
+    proto = LoRAContext(mode="single", params=None, scaling=scaling)
+
+    def step(base_params, lora_params, opt_state, batch):
+        def loss_fn(lp, b):
+            return tf.lm_loss(base_params, b, cfg, lora_params=lp,
+                              lora_ctx_proto=proto)
+
+        loss, grads = _microbatch_grads(loss_fn, lora_params, batch, n_micro)
+        lora_params, opt_state, metrics = adamw_update(
+            opt_cfg, grads, opt_state, param_dtype=jnp.float32)
+        metrics["loss"] = loss
+        return lora_params, opt_state, metrics
+
+    return step
+
+
+def auto_microbatches(cfg: ModelConfig, shape: ShapeConfig, n_batch_shards: int,
+                      budget_bytes: float = 2.5e9,
+                      seq_shard: int = 1) -> int:
+    """Pick a grad-accumulation factor so rematted layer inputs fit HBM.
+
+    saved-per-layer ~= B_local/n x S x d_model x 2 bytes / seq_shard."""
+    B_local = max(shape.global_batch // max(n_batch_shards, 1), 1)
+    layers = cfg.num_layers * (2 if cfg.family == "audio" else 1)
+    per_full = B_local * shape.seq_len * cfg.d_model * 2 * layers / seq_shard
+    n = 1
+    while per_full / n > budget_bytes and n < B_local:
+        n *= 2
+    return n

@@ -1,0 +1,165 @@
+"""Fault tolerance: checkpoint/restart bitwise-resume, straggler detection,
+elastic restore."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import (latest_step, restore_checkpoint,
+                                         save_checkpoint,
+                                         wait_for_async_saves)
+from repro.ft.failures import (FailurePlan, FaultTolerantRunner, FTConfig,
+                               StragglerDetected)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((2, 2), jnp.bfloat16),
+                       "c": jnp.asarray(3, jnp.int32)}}
+    save_checkpoint(str(tmp_path), 5, tree)
+    assert latest_step(str(tmp_path)) == 5
+    back = restore_checkpoint(str(tmp_path), 5, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    tree = {"x": jnp.zeros(3)}
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(str(tmp_path), s, tree, keep=2)
+    steps = sorted(int(p.name.split("_")[1])
+                   for p in tmp_path.glob("step_*"))
+    assert steps == [4, 5]
+
+
+def test_async_save(tmp_path):
+    tree = {"x": jnp.arange(1000.0)}
+    save_checkpoint(str(tmp_path), 1, tree, blocking=False)
+    wait_for_async_saves()
+    assert latest_step(str(tmp_path)) == 1
+
+
+def _make_counter_runner(tmp_path, plan, ckpt_every=2):
+    """Deterministic integer 'training': state = prod of per-step factors."""
+    saves = {}
+
+    def step_fn(state, i):
+        return {"v": state["v"] * (i + 2) % 1_000_003}
+
+    def save_fn(step, state):
+        saves[step] = dict(state)
+
+    def restore_fn():
+        if not saves:
+            return None
+        s = max(saves)
+        return s, dict(saves[s])
+
+    return FaultTolerantRunner(FTConfig(ckpt_every=ckpt_every), step_fn,
+                               save_fn, restore_fn, plan=plan), saves
+
+
+def test_restart_resumes_and_matches_no_failure_run(tmp_path):
+    clean, _ = _make_counter_runner(tmp_path, FailurePlan())
+    ref = clean.run({"v": 1}, 9)
+    faulty, _ = _make_counter_runner(
+        tmp_path, FailurePlan(fail_at_steps=(3, 7)))
+    out = faulty.run({"v": 1}, 9)
+    assert out == ref
+    assert faulty.state.restarts == 2
+
+
+def test_straggler_detection():
+    runner, _ = _make_counter_runner(
+        None, FailurePlan(straggle_at_steps=(6,), straggle_seconds=0.3))
+    runner.cfg = FTConfig(ckpt_every=100, straggler_factor=5.0)
+    runner.run({"v": 1}, 10)
+    assert runner.state.excluded_nodes == 1
+    assert any("step" in h["event"] for h in runner.state.history)
+
+
+ELASTIC_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint.checkpoint import save_checkpoint, restore_checkpoint
+from repro.launch.mesh import make_mesh_for
+import tempfile
+d = tempfile.mkdtemp()
+mesh8 = make_mesh_for(8, model_parallel=4)       # (2, 4) data x model
+x = jax.device_put(jnp.arange(64.0).reshape(8, 8),
+                   NamedSharding(mesh8, P("data", "model")))
+tree = {"w": x}
+save_checkpoint(d, 1, tree)
+# 'failure': restart on fewer devices -> different mesh
+mesh4 = make_mesh_for(4, model_parallel=2)       # (2, 2)
+sh = {"w": NamedSharding(mesh4, P("data", "model"))}
+back = restore_checkpoint(d, 1, tree, shardings=sh)
+np.testing.assert_array_equal(np.asarray(back["w"]), np.asarray(x))
+assert back["w"].sharding.mesh.size == 4
+print("elastic restore ok")
+"""
+
+
+def test_elastic_restore_different_mesh():
+    r = subprocess.run([sys.executable, "-c", ELASTIC_SCRIPT],
+                       capture_output=True, text=True,
+                       env={**os.environ, "PYTHONPATH": "src"},
+                       cwd=".", timeout=300)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "elastic restore ok" in r.stdout
+
+
+def test_train_resume_bitwise(tmp_path):
+    """Full train loop: crash at step 7, resume from step-5 ckpt, final
+    params identical to an uninterrupted run (deterministic data pipeline)."""
+    from repro.configs import smoke_config
+    from repro.launch.train import train_full
+
+    cfg = smoke_config("qwen3-1.7b")
+    ref = train_full(cfg, steps=8, batch=2, seq=32,
+                     ckpt_dir=str(tmp_path / "ref"), ckpt_every=5)
+
+    # interrupted run: wrap step to fail once at step 6
+    from repro.ft import failures as F
+    orig = F.FaultTolerantRunner._maybe_inject
+    plan_holder = {}
+
+    def train_with_failure():
+        import repro.launch.train as T
+        import repro.ft.failures as FF
+
+        class Plan(FF.FailurePlan):
+            pass
+
+        # monkeypatch FTConfig runner construction inside train_full by
+        # injecting failure thru a global plan
+        orig_runner = FF.FaultTolerantRunner
+
+        class R(orig_runner):
+            def __init__(self, cfg, step_fn, save_fn, restore_fn, plan=None,
+                         on_restart=None):
+                super().__init__(cfg, step_fn, save_fn, restore_fn,
+                                 plan=FF.FailurePlan(fail_at_steps=(6,)),
+                                 on_restart=on_restart)
+
+        FF.FaultTolerantRunner = R
+        T.FaultTolerantRunner = R
+        try:
+            return T.train_full(cfg, steps=8, batch=2, seq=32,
+                                ckpt_dir=str(tmp_path / "faulty"),
+                                ckpt_every=5)
+        finally:
+            FF.FaultTolerantRunner = orig_runner
+            T.FaultTolerantRunner = orig_runner
+
+    out = train_with_failure()
+    for a, b in zip(jax.tree.leaves(ref["params"]),
+                    jax.tree.leaves(out["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,136 @@
+"""Unit + property tests for the JD compression core (paper §3.1 / App. A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CompressionConfig, LoRABank, compress_bank,
+                        jd_convergence_gap, jd_diag, jd_full, jd_full_eig,
+                        jd_objective, normalize_bank, product_frob_norms,
+                        reconstruction_errors, stack_bank, svd_per_lora,
+                        svd_reconstruction_errors, ties_merge)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_bank(key, n=8, r_l=4, d_in=48, d_out=32, scale=0.25):
+    ka, kb = jax.random.split(key)
+    A = jax.random.normal(ka, (n, r_l, d_in)) * scale
+    B = jax.random.normal(kb, (n, d_out, r_l)) * scale
+    return A, B
+
+
+def test_product_norms_match_materialized():
+    A, B = random_bank(jax.random.PRNGKey(0))
+    deltas = jnp.einsum("nor,nri->noi", B, A)
+    ref = jnp.sqrt(jnp.sum(deltas ** 2, axis=(1, 2)))
+    np.testing.assert_allclose(product_frob_norms(A, B), ref, rtol=1e-5)
+
+
+def test_error_formula_matches_materialized():
+    A, B = random_bank(jax.random.PRNGKey(1))
+    res = jd_full(A, B, rank=6, iters=8)
+    deltas = jnp.einsum("nor,nri->noi", B, A)
+    err_mat = jnp.sum((deltas - res.reconstruct()) ** 2)
+    errs = reconstruction_errors(A, B, res)
+    np.testing.assert_allclose(err_mat, jnp.sum(errs["err_sq"]), rtol=1e-3)
+
+
+def test_jd_full_lossless_at_tilde_r():
+    from repro.core.theory import tilde_r
+    A, B = random_bank(jax.random.PRNGKey(2), n=4, r_l=3, d_in=32, d_out=24)
+    tr = tilde_r(A, B)
+    res = jd_full(A, B, rank=tr, iters=30)
+    assert float(reconstruction_errors(A, B, res)["loss"]) < 1e-5
+
+
+def test_jd_full_monotone_in_rank():
+    A, B = random_bank(jax.random.PRNGKey(3))
+    losses = [float(reconstruction_errors(
+        A, B, jd_full(A, B, rank=r, iters=12))["loss"]) for r in (2, 4, 8, 16)]
+    assert all(l1 >= l2 - 1e-4 for l1, l2 in zip(losses, losses[1:])), losses
+
+
+def test_objective_decreases_with_iters():
+    A, B = random_bank(jax.random.PRNGKey(4))
+    o1 = float(jd_objective(A, B, jd_full(A, B, rank=6, iters=1)))
+    o10 = float(jd_objective(A, B, jd_full(A, B, rank=6, iters=10)))
+    assert o10 <= o1 + 1e-5
+
+
+def test_eig_iteration_matches_eigh():
+    A, B = random_bank(jax.random.PRNGKey(5))
+    l_eigh = float(reconstruction_errors(A, B, jd_full(A, B, 8, iters=15))["loss"])
+    l_eig = float(reconstruction_errors(A, B, jd_full_eig(A, B, 8, iters=60))["loss"])
+    assert abs(l_eig - l_eigh) < 0.02, (l_eig, l_eigh)
+
+
+def test_eig_iteration_convergence():
+    """App. H.12 convergence criterion reaches small gap."""
+    A, B = random_bank(jax.random.PRNGKey(6))
+    res1 = jd_full_eig(A, B, rank=6, iters=40)
+    res2 = jd_full_eig(A, B, rank=6, iters=41)
+    gap = float(jd_convergence_gap(res1.U, res2.U))
+    assert gap < 0.05
+
+
+def test_jd_diag_no_better_than_full():
+    """Same r: diag constrains Sigma, so error >= full (paper §4)."""
+    A, B = random_bank(jax.random.PRNGKey(7))
+    lf = float(reconstruction_errors(A, B, jd_full(A, B, 8, iters=15))["loss"])
+    ld = float(reconstruction_errors(A, B, jd_diag(A, B, 8, iters=40))["loss"])
+    assert ld >= lf - 0.02
+
+
+def test_svd_lossless_at_full_rank():
+    A, B = random_bank(jax.random.PRNGKey(8), r_l=4)
+    res = svd_per_lora(A, B, rank=4)
+    assert float(svd_reconstruction_errors(A, B, res)["loss"]) < 1e-5
+
+
+def test_normalization_roundtrip():
+    A, B = random_bank(jax.random.PRNGKey(9), n=3, r_l=2, d_in=16, d_out=12)
+    bank = LoRABank(A=A, B=B, ranks=jnp.full((3,), 2, jnp.int32))
+    from repro.core.theory import tilde_r
+    tr = tilde_r(A, B)
+    cm = compress_bank(bank, CompressionConfig(method="jd_full", rank=tr,
+                                               iters=40, normalize=True))
+    # denormalized sigma must reconstruct the ORIGINAL (unnormalized) deltas
+    rec = cm.result.reconstruct(1)
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(B[1] @ A[1]),
+                               atol=2e-3)
+
+
+def test_stack_bank_pads_heterogeneous_ranks():
+    key = jax.random.PRNGKey(10)
+    pairs = []
+    for r in (2, 4, 3):
+        ka, kb = jax.random.split(jax.random.fold_in(key, r))
+        pairs.append((jax.random.normal(ka, (r, 20)),
+                      jax.random.normal(kb, (16, r))))
+    bank = stack_bank(pairs)
+    assert bank.A.shape == (3, 4, 20)
+    for i, (a, b) in enumerate(pairs):
+        np.testing.assert_allclose(np.asarray(bank.delta(i)),
+                                   np.asarray(b @ a), rtol=2e-5, atol=1e-5)
+
+
+def test_ties_merge_single_basis():
+    A, B = random_bank(jax.random.PRNGKey(11))
+    res = ties_merge(A, B, rank=8)
+    assert res.U.shape[-1] == 8 and res.sigma.shape[0] == A.shape[0]
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(2, 10), r_l=st.integers(1, 5),
+       d_in=st.integers(8, 40), d_out=st.integers(8, 40),
+       rank=st.integers(1, 12), seed=st.integers(0, 2 ** 16))
+def test_property_error_nonneg_and_bounded(n, r_l, d_in, d_out, rank, seed):
+    """0 <= loss <= 1 after normalization, any shape/rank."""
+    A, B = random_bank(jax.random.PRNGKey(seed), n=n, r_l=r_l,
+                       d_in=d_in, d_out=d_out)
+    A, B, _ = normalize_bank(A, B)
+    res = jd_full(A, B, rank=min(rank, d_in, d_out), iters=6)
+    loss = float(reconstruction_errors(A, B, res)["loss"])
+    assert -1e-4 <= loss <= 1.0 + 1e-4

@@ -1,0 +1,134 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as R
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.jd_apply import jd_apply
+from repro.kernels.sgmv import sgmv_expand, sgmv_shrink, sigma_bmm
+
+TOL = dict(rtol=2e-2, atol=3e-2)
+
+
+def grouped_inputs(seed, T, d_in, n, tile, dtype):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    ids = jax.random.randint(ks[0], (T,), 0, n)
+    x = (jax.random.normal(ks[1], (T, d_in), jnp.float32)).astype(dtype)
+    perm, tile_ids, valid = R.group_tokens_by_adapter(ids, n, tile)
+    return x[perm], ids[perm], tile_ids, valid
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+@pytest.mark.parametrize("T,d_in,d_out,n,r,tile", [
+    (32, 128, 64, 3, 8, 8),
+    (64, 256, 192, 5, 16, 8),
+    (128, 512, 256, 2, 32, 16),
+    (16, 64, 128, 7, 4, 8),
+])
+def test_sgmv_sweep(T, d_in, d_out, n, r, tile, dtype):
+    xg, idg, tile_ids, _ = grouped_inputs(0, T, d_in, n, tile, dtype)
+    key = jax.random.PRNGKey(1)
+    A = (jax.random.normal(key, (n, r, d_in)) / 8).astype(dtype)
+    B = (jax.random.normal(key, (n, d_out, r)) / 4).astype(dtype)
+    t = sgmv_shrink(xg, A, tile_ids, block_t=tile, block_d=64)
+    t_ref = R.sgmv_shrink_ref(xg, A, idg).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(t), np.asarray(t_ref), **TOL)
+    y = sgmv_expand(t.astype(dtype), B, tile_ids, block_t=tile, block_d=64)
+    y_ref = R.sgmv_expand_ref(t.astype(dtype), B, idg)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **TOL)
+
+
+@pytest.mark.parametrize("r", [4, 16])
+def test_sigma_bmm(r):
+    T, n, tile = 48, 4, 8
+    xg, idg, tile_ids, _ = grouped_inputs(2, T, r, n, tile, jnp.float32)
+    sig = jax.random.normal(jax.random.PRNGKey(3), (n, r, r)) / 4
+    out = sigma_bmm(xg, sig, tile_ids, block_t=tile)
+    ref = R.sigma_bmm_ref(xg, sig, idg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+@pytest.mark.parametrize("diag", [True, False])
+@pytest.mark.parametrize("k_clusters", [1, 3])
+def test_jd_apply_sweep(diag, k_clusters):
+    T, d_in, d_out, n, r, tile = 64, 192, 128, 6, 8, 8
+    xg, idg, tile_ids, _ = grouped_inputs(4, T, d_in, n, tile, jnp.bfloat16)
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 3)
+    U = (jax.random.normal(ks[0], (k_clusters, d_out, r)) / 4).astype(jnp.bfloat16)
+    V = (jax.random.normal(ks[1], (k_clusters, d_in, r)) / 8).astype(jnp.bfloat16)
+    cluster_of = jnp.arange(n, dtype=jnp.int32) % k_clusters
+    sig = (jnp.abs(jax.random.normal(ks[2], (n, r))) if diag
+           else jax.random.normal(ks[2], (n, r, r)) / 4)
+    tile_cids = cluster_of[tile_ids]
+    out = jd_apply(xg, U, V, sig, cluster_of, idg, tile_cids, tile_ids)
+    ref = R.jd_apply_ref(xg, U, V, sig, cluster_of, idg)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+@pytest.mark.parametrize("B,H,Kv,hd,S,bs", [
+    (2, 4, 2, 32, 128, 32),
+    (3, 8, 4, 64, 256, 64),
+    (1, 2, 1, 16, 64, 64),     # single block
+])
+def test_flash_decode_sweep(B, H, Kv, hd, S, bs, dtype):
+    key = jax.random.PRNGKey(6)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, H, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, Kv, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, Kv, hd)).astype(dtype)
+    kv_len = jax.random.randint(ks[3], (B,), 1, S + 1)
+    out, l, m = flash_decode(q, k, v, kv_len, block_s=bs)
+    ref = R.flash_decode_ref(q, k, v, kv_len)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_flash_decode_merge_stats():
+    """(m, l) stats support sequence-sharded softmax merging: two half-KV
+    kernel calls merged == full-KV call (the long-context decode path)."""
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 3)
+    B, H, Kv, hd, S = 2, 4, 2, 32, 128
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Kv, hd), jnp.float32)
+    kv_len = jnp.full((B,), S, jnp.int32)
+    full, _, _ = flash_decode(q, k, v, kv_len, block_s=32)
+    h = S // 2
+    o1, l1, m1 = flash_decode(q, k[:, :h], v[:, :h],
+                              jnp.full((B,), h, jnp.int32), block_s=32)
+    o2, l2, m2 = flash_decode(q, k[:, h:], v[:, h:],
+                              jnp.full((B,), h, jnp.int32), block_s=32)
+    G = H // Kv
+    m = jnp.maximum(m1, m2)
+    w1 = jnp.exp(m1 - m) * l1
+    w2 = jnp.exp(m2 - m) * l2
+    o1g = o1.reshape(B, Kv, G, hd)
+    o2g = o2.reshape(B, Kv, G, hd)
+    merged = (o1g * w1 + o2g * w2) / (w1 + w2)
+    np.testing.assert_allclose(np.asarray(merged.reshape(B, H, hd)),
+                               np.asarray(full), rtol=2e-4, atol=2e-4)
+
+
+def test_ops_dispatch_matches_ref():
+    from repro.kernels import ops
+    T, d_in, d_out, n, r = 40, 96, 64, 4, 8
+    key = jax.random.PRNGKey(8)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (T, d_in), jnp.float32)
+    A = jax.random.normal(ks[1], (n, r, d_in)) / 8
+    B = jax.random.normal(ks[2], (n, d_out, r)) / 4
+    ids = jax.random.randint(ks[3], (T,), 0, n)
+    y_k = ops.lora_apply(x, A, B, ids, tile=8, use_pallas="interpret")
+    y_r = ops.lora_apply(x, A, B, ids, use_pallas="ref")
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=1e-3, atol=1e-3)

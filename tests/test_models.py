@@ -1,0 +1,165 @@
+"""Per-arch smoke tests (reduced same-family configs) + decode consistency.
+
+Every assigned architecture instantiates a REDUCED config, runs one forward/
+train step on CPU, asserts output shapes + finite values; a representative
+subset also checks prefill+decode == full-forward logits.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, smoke_config, smoke_shape
+from repro.models import api, transformer as tf
+from repro.models.layers import logits_fwd
+from repro.models.param import count_defs, init_params
+
+
+def _make_batch(cfg, shape, key):
+    out = {}
+    for k, v in api.batch_struct(cfg, shape).items():
+        if v.dtype == jnp.int32:
+            out[k] = jax.random.randint(key, v.shape, 0, cfg.vocab_size)
+        else:
+            out[k] = jax.random.normal(key, v.shape, jnp.float32).astype(v.dtype)
+    return out
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_train_step(arch):
+    cfg = smoke_config(arch)
+    defs = tf.model_defs(cfg)
+    params = init_params(defs, jax.random.PRNGKey(0))
+    batch = _make_batch(cfg, smoke_shape("train"), jax.random.PRNGKey(1))
+    loss = tf.lm_loss(params, batch, cfg)
+    assert jnp.isfinite(loss), arch
+    # random init => loss near ln(V)
+    assert abs(float(loss) - math.log(cfg.vocab_size)) < 1.5, float(loss)
+    # one gradient step moves the loss
+    from repro.training.step import make_train_step
+    grad_step = make_train_step(cfg, with_opt=False)
+    l2, grads = grad_step(params, batch)
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(l2) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "deepseek-moe-16b",
+                                  "mamba2-2.7b", "zamba2-2.7b",
+                                  "whisper-small", "pixtral-12b"])
+def test_decode_matches_full_forward(arch):
+    cfg = smoke_config(arch)
+    defs = tf.model_defs(cfg)
+    params = init_params(defs, jax.random.PRNGKey(0))
+    B, S_prompt, S_max = 2, 16, 32
+    key = jax.random.PRNGKey(1)
+    enc_len = S_prompt if cfg.family == "audio" else 0
+    cache = tf.init_cache(cfg, B, S_max, enc_len=enc_len)
+    batch = {"tokens": jax.random.randint(key, (B, S_prompt), 0,
+                                          cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            key, (B, 4, cfg.d_model)).astype(jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (B, S_prompt, cfg.d_model)).astype(jnp.bfloat16)
+    _, cache = tf.prefill(params, batch, cfg, cache)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, 3), 0,
+                              cfg.vocab_size)
+    lg = None
+    for i in range(3):
+        lg, cache = tf.decode_step(params, toks[:, i:i + 1], cfg, cache)
+    full = dict(batch)
+    full["tokens"] = jnp.concatenate([batch["tokens"], toks], 1)
+    h, _, _ = tf.forward(params, cfg, tokens=full["tokens"],
+                         patches=full.get("patches"),
+                         frames=full.get("frames"), mode="train")
+    ref = logits_fwd(params["embed"], h[:, -1:], cfg)
+    err = float(jnp.max(jnp.abs(lg.astype(jnp.float32)
+                                - ref.astype(jnp.float32))))
+    assert err < 0.1, (arch, err)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_full_config_param_counts(arch):
+    """The FULL configs' analytic param counts land in the advertised class
+    (sanity that configs/<id>.py match the public architecture)."""
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    expected = {
+        "deepseek-moe-16b": (14e9, 19e9),
+        "granite-moe-3b-a800m": (2.5e9, 4e9),
+        "qwen3-32b": (28e9, 36e9),
+        "qwen3-1.7b": (1.6e9, 2.4e9),
+        "mistral-large-123b": (110e9, 130e9),
+        "qwen1.5-110b": (100e9, 120e9),
+        "zamba2-2.7b": (2.2e9, 3.3e9),
+        "pixtral-12b": (11e9, 14e9),
+        "mamba2-2.7b": (2.3e9, 3.1e9),
+        "whisper-small": (0.2e9, 0.35e9),
+    }[arch]
+    assert expected[0] < n < expected[1], (arch, n)
+
+
+def test_per_slot_decode_positions():
+    """Continuous-batching path: per-row cache indices decode correctly."""
+    cfg = smoke_config("qwen3-1.7b")
+    defs = tf.model_defs(cfg)
+    params = init_params(defs, jax.random.PRNGKey(0))
+    B, S_max = 2, 32
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (B, 10), 0, cfg.vocab_size)
+    # reference: scalar-index batch decode of both rows together
+    cache = tf.init_cache(cfg, B, S_max)
+    _, cache = tf.prefill(params, {"tokens": toks}, cfg, cache)
+    nxt = jax.random.randint(jax.random.PRNGKey(2), (B, 1), 0, cfg.vocab_size)
+    ref_lg, _ = tf.decode_step(params, nxt, cfg, cache)
+    # per-row: same lengths expressed as a vector index
+    cache2 = tf.init_cache(cfg, B, S_max)
+    _, cache2 = tf.prefill(params, {"tokens": toks}, cfg, cache2)
+    cache2["index"] = jnp.full((B,), 10, jnp.int32)
+    lg, _ = tf.decode_step(params, nxt, cfg, cache2)
+    np.testing.assert_allclose(np.asarray(lg, np.float32),
+                               np.asarray(ref_lg, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_lora_modes_consistent():
+    """single / batched / jd application paths agree when constructed to
+    represent the same adapter."""
+    cfg = smoke_config("qwen3-1.7b")
+    defs = tf.model_defs(cfg)
+    params = init_params(defs, jax.random.PRNGKey(0))
+    from repro.models.lora import LoRAContext
+    from repro.models.transformer import lora_defs_tree
+    lp = init_params(lora_defs_tree(cfg), jax.random.PRNGKey(3),
+                     dtype_override=jnp.float32)
+    # make b nonzero so the delta matters
+    lp = jax.tree.map(lambda x: x + 0.01, lp)
+    key = jax.random.PRNGKey(4)
+    toks = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+
+    def fwd(mode, lora_params, ids=None, scaling=1.0):
+        proto = LoRAContext(mode=mode, params=None, ids=ids, scaling=scaling)
+        h, _, _ = tf.forward(params, cfg, tokens=toks, mode="train",
+                             lora_params=lora_params, lora_ctx_proto=proto)
+        return h
+
+    h_single = fwd("single", lp, scaling=2.0)
+    # batched bank with n=3 where adapter 1 == the single adapter (x2 scale
+    # folded into B)
+    bank = {"layers": {tgt: {
+        "A": jnp.stack([jnp.zeros_like(lp["layers"][tgt]["a"]),
+                        lp["layers"][tgt]["a"],
+                        jnp.ones_like(lp["layers"][tgt]["a"])], axis=1),
+        "B": jnp.stack([jnp.zeros_like(lp["layers"][tgt]["b"]),
+                        lp["layers"][tgt]["b"] * 2.0,
+                        jnp.ones_like(lp["layers"][tgt]["b"])], axis=1),
+    } for tgt in lp["layers"]}}
+    ids = jnp.array([1, 1], jnp.int32)
+    h_batched = fwd("batched", bank, ids=ids)
+    np.testing.assert_allclose(np.asarray(h_single, np.float32),
+                               np.asarray(h_batched, np.float32),
+                               rtol=3e-2, atol=3e-2)

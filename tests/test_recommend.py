@@ -1,0 +1,46 @@
+"""§6.5 hyperparameter recommendation procedure."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import LoRABank, recommend, recommend_rank
+from repro.core.recommend import pick_probe_module
+
+
+def test_rank_rule():
+    assert recommend_rank(64) == 64 // 2 + 7
+    assert recommend_rank(2) >= 4
+
+
+def test_probe_module_is_middle():
+    names = [f"layers.{i}.q" for i in range(9)]
+    assert pick_probe_module(names) == sorted(names)[4]
+
+
+def test_small_collection_no_clustering():
+    key = jax.random.PRNGKey(0)
+    banks = {}
+    for m in ("l0.q", "l1.q"):
+        ka, kb = jax.random.split(jax.random.fold_in(key, hash(m) % 100))
+        banks[m] = LoRABank(A=jax.random.normal(ka, (10, 2, 24)),
+                            B=jax.random.normal(kb, (10, 24, 2)),
+                            ranks=jnp.full((10,), 2, jnp.int32))
+    rec = recommend(banks)
+    assert rec.n_clusters == 1
+    assert rec.rank == recommend_rank(10)
+
+
+def test_large_collection_picks_clusters():
+    key = jax.random.PRNGKey(1)
+    n = 120
+    banks = {}
+    ka, kb = jax.random.split(key)
+    # two strong families => clustering should hit the 0.6 threshold fast
+    A1 = jnp.tile(jax.random.normal(ka, (1, 2, 24)), (n // 2, 1, 1))
+    A2 = jnp.tile(jax.random.normal(kb, (1, 2, 24)), (n // 2, 1, 1))
+    A = jnp.concatenate([A1, A2]) + 0.05 * jax.random.normal(ka, (n, 2, 24))
+    B = jnp.tile(jax.random.normal(kb, (1, 24, 2)), (n, 1, 1))
+    banks["mid.q"] = LoRABank(A=A, B=B, ranks=jnp.full((n,), 2, jnp.int32))
+    rec = recommend(banks, rank=4, max_clusters=8, iters=8)
+    assert rec.n_clusters <= 8
+    assert rec.probe_module == "mid.q"
+    assert min(rec.probe_losses.values()) < 0.6

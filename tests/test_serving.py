@@ -1,0 +1,113 @@
+"""Serving engine invariants + throughput-study sanity."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving.adapter_cache import AdapterCache, CacheConfig
+from repro.serving.engine import (CostModelExecutor, EngineConfig,
+                                  ModelFootprint, ServingEngine,
+                                  ServingHardware)
+from repro.serving.request import Request
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.serving.simulator import (WorkloadConfig, compression_setting,
+                                     make_workload, run_throughput_study)
+
+
+def _engine(mode="lora", n_adapters=16, budget=None, max_batch=8):
+    cfg = get_config("mistral-7b")
+    fp = ModelFootprint.from_config(cfg)
+    ex = CostModelExecutor(ServingHardware(), fp, mode,
+                           {a: 0 for a in range(n_adapters)})
+    budget = budget or 4 * fp.lora_bytes_per_adapter
+    eng = ServingEngine(EngineConfig(
+        scheduler=SchedulerConfig(max_batch=max_batch),
+        adapter_budget_bytes=budget, mode=mode), ex)
+    return eng, fp
+
+
+def test_all_requests_served_exactly_once():
+    eng, _ = _engine()
+    reqs = make_workload(WorkloadConfig(n_requests=100, n_adapters=16))
+    eng.submit(reqs)
+    stats = eng.run()
+    assert stats.n_requests == 100
+    assert all(r.done and r.finish_time is not None for r in reqs)
+    assert stats.n_tokens == sum(r.max_new_tokens for r in reqs)
+
+
+def test_cache_capacity_never_exceeded():
+    cfg = CacheConfig(capacity_bytes=1000)
+    c = AdapterCache(cfg)
+    for i in range(50):
+        c.ensure(i % 7, 300, now=float(i))
+        assert c.used_bytes <= 1000
+    with pytest.raises(MemoryError):
+        c.ensure(99, 2000, now=0.0)
+
+
+def test_pinned_shared_counts_against_budget():
+    c = AdapterCache(CacheConfig(capacity_bytes=1000))
+    c.pin_shared(800)
+    c.ensure(0, 150, now=0.0)
+    assert c.used_bytes == 950
+    with pytest.raises(MemoryError):
+        c.pin_shared(300)
+
+
+def test_swap_count_grows_with_adapter_pressure():
+    eng_small, fp = _engine(budget=2 * 1)  # tiny budget => swaps every time
+    eng_small.cache.cfg = CacheConfig(2 * fp.lora_bytes_per_adapter)
+    eng_small.cache.cfg = CacheConfig(2 * fp.lora_bytes_per_adapter)
+    eng_big, _ = _engine(budget=64 * fp.lora_bytes_per_adapter)
+    wl = WorkloadConfig(n_requests=200, n_adapters=32)
+    eng2, _ = _engine(budget=2 * fp.lora_bytes_per_adapter)
+    eng2.submit(make_workload(wl))
+    s_small = eng2.run()
+    eng_big.submit(make_workload(wl))
+    s_big = eng_big.run()
+    assert s_small.n_swaps > s_big.n_swaps
+    assert s_small.throughput_rps < s_big.throughput_rps
+
+
+def test_scheduler_prefers_resident_and_cluster():
+    sched = Scheduler(SchedulerConfig(max_batch=2, cluster_aware=True),
+                      cluster_of={0: 0, 1: 0, 2: 1})
+    running = [Request(rid=0, adapter_id=0, prompt_len=8, max_new_tokens=4)]
+    waiting = [Request(rid=1, adapter_id=2, prompt_len=8, max_new_tokens=4,
+                       arrival_time=0.0),
+               Request(rid=2, adapter_id=1, prompt_len=8, max_new_tokens=4,
+                       arrival_time=1.0)]
+    picked = sched.admit(running, waiting, resident=set(), now=2.0)
+    # adapter 1 shares cluster 0 with the running adapter 0 => preferred
+    assert picked[0].adapter_id == 1
+
+
+def test_jd_mode_no_swaps_at_scale():
+    cfg = get_config("mistral-7b")
+    setting = compression_setting(1024)
+    fp = ModelFootprint.from_config(cfg, jd_rank=setting["rank"],
+                                    n_clusters=setting["clusters"])
+    cluster_of = {a: a % setting["clusters"] for a in range(1024)}
+    ex = CostModelExecutor(ServingHardware(), fp, "jd", cluster_of)
+    budget = (fp.jd_shared_bytes_per_cluster * setting["clusters"]
+              + 1024 * fp.jd_sigma_bytes_per_adapter) * 1.05
+    eng = ServingEngine(EngineConfig(
+        scheduler=SchedulerConfig(max_batch=16),
+        adapter_budget_bytes=budget, mode="jd"), ex, cluster_of)
+    eng.submit(make_workload(WorkloadConfig(n_requests=300,
+                                            n_adapters=1024)))
+    stats = eng.run()
+    # all sigmas fit: after warm-up there is no further swapping
+    assert stats.n_swaps <= 1024
+    assert stats.swap_time < 0.05 * stats.wall_time
+
+
+def test_throughput_ratio_grows_with_n():
+    cfg = get_config("mistral-7b")
+    rows = run_throughput_study(
+        cfg, [4, 256], WorkloadConfig(n_requests=150, new_tokens=10))
+    r4, r256 = rows[0], rows[1]
+    assert r256["throughput_ratio_jd_vs_lora"] > r4["throughput_ratio_jd_vs_lora"]
+    assert r256["jd_frac_of_single"] > 0.8     # paper: >= 80% of single-LoRA

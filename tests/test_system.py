@@ -1,0 +1,196 @@
+"""End-to-end behaviour test of the paper's pipeline at reproducible scale:
+
+  pretrain base on a task *family*  ->  train per-task LoRAs on NEW family
+  members  ->  jointly compress (JD)  ->  compressed adapters preserve task
+  performance (+high agreement)  ->  serving path equals offline logits.
+
+This is the ICML paper's §5-§6 story on a reduced base model: real training,
+real eval, real serving — no mocks.  Task family = sequence rotations: the
+base learns the rotation *concept*, each LoRA learns a new rotation amount
+(an attention-shift, exactly what q/k adapters express).
+"""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core import CompressionConfig, compress_bank, stack_bank
+from repro.data import tasks as T
+from repro.data.pipeline import mixture_loader
+from repro.launch.train import train_lora_collection
+from repro.models import transformer as tf
+from repro.models.layers import logits_fwd
+from repro.models.lora import LoRAContext
+from repro.models.param import init_params
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.step import make_train_step
+
+N_TASKS = 3
+SEQ = 24
+
+
+def rot_task(tid, want_k, in_len=8):
+    for s in range(2000):
+        spec = T.TaskSpec(task_id=tid, kind="rotate", seed=s, vocab=32,
+                          in_len=in_len, instr_len=2)
+        rng = np.random.default_rng(spec.seed)
+        if int(rng.integers(1, in_len - 1)) == want_k:
+            return spec
+    raise AssertionError("no seed found")
+
+
+EVAL_SPECS = None  # filled in fixture
+
+
+@pytest.fixture(scope="module")
+def trained(tmp_path_factory):
+    out = tmp_path_factory.mktemp("loras")
+    cfg = dc.replace(smoke_config("mistral-7b"), num_layers=2)
+    defs = tf.model_defs(cfg)
+    base = init_params(defs, jax.random.PRNGKey(0))
+    opt = init_opt_state(base)
+    pre_specs = [rot_task(100 + i, k) for i, k in enumerate([1, 2, 4])]
+    eval_specs = [rot_task(i, k) for i, k in enumerate([3, 5, 6])]
+    gen = mixture_loader(pre_specs, 32, SEQ, base_seed=5)(0)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=3e-3, warmup_steps=30,
+                                                    total_steps=600)))
+    for i in range(450):
+        b = next(gen)
+        base, opt, _ = step(base, opt, {k: jnp.asarray(v)
+                                        for k, v in b.items()})
+    train_lora_collection(cfg, N_TASKS, 300, batch=32, seq=SEQ,
+                          out_dir=str(out), base_params=base,
+                          specs=eval_specs, lr=1e-2, log_every=10_000)
+    loras = []
+    for t in range(N_TASKS):
+        z = np.load(out / f"lora_task{t}.npz")
+        tree = {"layers": {}}
+        for k in z.files:
+            parts = k.split("/")
+            tree["layers"].setdefault(parts[1], {})[parts[2]] = jnp.asarray(z[k])
+        loras.append(tree)
+    return cfg, base, loras, eval_specs
+
+
+def _predict_fn(cfg, base, lora_params, proto):
+    def predict(tokens):
+        h, _, _ = tf.forward(base, cfg, tokens=jnp.asarray(tokens),
+                             mode="train", lora_params=lora_params,
+                             lora_ctx_proto=proto)
+        return np.asarray(jnp.argmax(logits_fwd(base["embed"], h, cfg), -1))
+    return predict
+
+
+def _task_loss(cfg, base, lora, proto, spec):
+    b = {k: jnp.asarray(v) for k, v in T.batch_of(spec, 32, SEQ, 999).items()}
+    return float(tf.lm_loss(base, b, cfg, lora_params=lora,
+                            lora_ctx_proto=proto))
+
+
+def _proto(cfg):
+    return LoRAContext(mode="single", params=None,
+                       scaling=cfg.lora.alpha / cfg.lora.rank)
+
+
+def test_lora_training_learns_tasks(trained):
+    cfg, base, loras, specs = trained
+    for t in (0, 1):
+        l_base = _task_loss(cfg, base, None, None, specs[t])
+        l_lora = _task_loss(cfg, base, loras[t], _proto(cfg), specs[t])
+        assert l_lora < l_base - 0.3, (t, l_base, l_lora)
+    a_base = T.eval_token_accuracy(specs[0], _predict_fn(cfg, base, None, None),
+                                   n=16, seq_len=SEQ)
+    a_lora = T.eval_token_accuracy(
+        specs[0], _predict_fn(cfg, base, loras[0], _proto(cfg)),
+        n=16, seq_len=SEQ)
+    assert a_lora > a_base + 0.08, (a_base, a_lora)
+
+
+def _compress(cfg, loras, method="jd_full", rank=None, diag_iters=25):
+    """Joint compression of the collection, re-exported as per-task rank-r
+    (a, b) pairs: a = Sigma_i V^T, b = U."""
+    scale = cfg.lora.alpha / cfg.lora.rank
+    rank = rank or 3 * cfg.lora.rank
+    comp = [dict(layers={}) for _ in range(N_TASKS)]
+    losses = []
+    for tgt in loras[0]["layers"]:
+        L = loras[0]["layers"][tgt]["a"].shape[0]
+        for layer in range(L):
+            pairs = [(loras[t]["layers"][tgt]["a"][layer],
+                      loras[t]["layers"][tgt]["b"][layer] * scale)
+                     for t in range(N_TASKS)]
+            bank = stack_bank(pairs)
+            cm = compress_bank(bank, CompressionConfig(
+                method=method, rank=rank, iters=diag_iters))
+            losses.append(cm.metrics["loss"])
+            res = cm.result
+            sig = res.sigma_full() if hasattr(res, "sigma_full") else res.sigma
+            for t in range(N_TASKS):
+                tr = comp[t]["layers"].setdefault(tgt, {"a": [], "b": []})
+                tr["a"].append(sig[t] @ res.V.T)
+                tr["b"].append(res.U)
+    for t in range(N_TASKS):
+        for tgt in comp[t]["layers"]:
+            tr = comp[t]["layers"][tgt]
+            comp[t]["layers"][tgt] = {
+                "a": jnp.stack([jnp.asarray(x) for x in tr["a"]]),
+                "b": jnp.stack([jnp.asarray(x) for x in tr["b"]])}
+    return comp, float(np.mean(losses))
+
+
+def test_compression_preserves_performance(trained):
+    """Fig. 2/3 analogue: near-lossless joint rank keeps task metrics."""
+    cfg, base, loras, specs = trained
+    comp, recon = _compress(cfg, loras)
+    assert recon < 0.05, recon       # n*r joint rank ~= lossless
+    unit = LoRAContext(mode="single", params=None, scaling=1.0)
+    for t in range(N_TASKS):
+        l_unc = _task_loss(cfg, base, loras[t], _proto(cfg), specs[t])
+        l_comp = _task_loss(cfg, base, comp[t], unit, specs[t])
+        assert l_comp <= l_unc + 0.1, (t, l_unc, l_comp)
+        # agreement (§H.9): greedy generations match between compressed and
+        # uncompressed adapters
+        b = T.batch_of(specs[t], 16, SEQ, seed=424)
+        p_unc = _predict_fn(cfg, base, loras[t], _proto(cfg))(b["tokens"])
+        p_comp = _predict_fn(cfg, base, comp[t], unit)(b["tokens"])
+        mask = b["targets"] >= 0
+        agree = float((p_unc == p_comp)[mask].mean())
+        assert agree > 0.9, (t, agree)
+
+
+def test_aggressive_compression_degrades_gracefully(trained):
+    """Rank sweep: reconstruction error grows as rank shrinks (Fig. 6)."""
+    cfg, base, loras, specs = trained
+    _, r_full = _compress(cfg, loras, rank=3 * cfg.lora.rank)
+    _, r_half = _compress(cfg, loras, rank=cfg.lora.rank)
+    _, r_tiny = _compress(cfg, loras, rank=4)
+    assert r_full < r_half < r_tiny, (r_full, r_half, r_tiny)
+
+
+def test_served_collection_matches_offline_logits(trained):
+    """Batched multi-LoRA serving == offline single-adapter forward."""
+    cfg, base, loras, specs = trained
+    scale = cfg.lora.alpha / cfg.lora.rank
+    n = N_TASKS
+    bundles = {"layers": {}}
+    for tgt in loras[0]["layers"]:
+        A = jnp.stack([loras[t]["layers"][tgt]["a"] for t in range(n)], axis=1)
+        B = jnp.stack([loras[t]["layers"][tgt]["b"] * scale
+                       for t in range(n)], axis=1)
+        bundles["layers"][tgt] = {"A": A, "B": B}
+    key = jax.random.PRNGKey(9)
+    toks = jax.random.randint(key, (1, 12), 0, cfg.vocab_size)
+    cache = tf.init_cache(cfg, 1, 32)
+    lg1, _ = tf.prefill(base, {"tokens": toks}, cfg, cache,
+                        lora_params=loras[1], lora_ctx_proto=_proto(cfg))
+    proto_b = LoRAContext(mode="batched", params=None,
+                          ids=jnp.asarray([1], jnp.int32), scaling=1.0)
+    cache2 = tf.init_cache(cfg, 1, 32)
+    lg2, _ = tf.prefill(base, {"tokens": toks}, cfg, cache2,
+                        lora_params=bundles, lora_ctx_proto=proto_b)
+    np.testing.assert_allclose(np.asarray(lg1, np.float32),
+                               np.asarray(lg2, np.float32),
+                               rtol=0.05, atol=0.1)
