@@ -1,0 +1,87 @@
+"""Fleet-scale serving study: replicas x popularity skew x routing policy.
+
+Extends the paper's Fig. 1/4 single-replica setup to the production regime
+S-LoRA measures: many replicas, Zipf-skewed adapter popularity, asynchronous
+(Poisson) arrivals.  Compares routing policies for both the uncompressed
+("lora") and compressed ("jd") serving modes; JD-cluster-affinity routing
+co-locates adapters sharing a compressed basis, maximizing pinned-base reuse
+per replica and minimizing swap traffic.
+
+CSV columns: name,us_per_call,derived  (matches benchmarks/run.py contract).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+from repro.configs import get_config
+from repro.serving.router import FleetConfig
+from repro.serving.simulator import build_fleet, memory_matched_setup
+from repro.serving.workload import WorkloadSpec, make_workload
+
+try:
+    from .common import csv_row
+except ImportError:                      # run as a script, not a module
+    from common import csv_row
+
+
+def run_cell(model_cfg, n_adapters: int, n_replicas: int, policy: str,
+             mode: str, wl: WorkloadSpec, cluster_seed: int = 0,
+             prefetch: bool = False):
+    from repro.serving.engine import ServingHardware
+    setting, cluster_of, budget = memory_matched_setup(
+        model_cfg, n_adapters, cluster_seed)
+    fleet = build_fleet(model_cfg, mode, n_adapters, budget,
+                        FleetConfig(n_replicas=n_replicas, policy=policy),
+                        ServingHardware(), cluster_of, setting,
+                        prefetch=prefetch)
+    fleet.submit(make_workload(
+        dataclasses.replace(wl, n_adapters=n_adapters)))
+    return fleet.run()
+
+
+def main(quick: bool = True):
+    cfg = get_config("mistral-7b")
+    n_adapters = 256
+    replicas = [4] if quick else [1, 2, 4, 8]
+    skews = [("uniform", 0.0), ("zipf1.0", 1.0)]
+    policies = ["round_robin", "least_outstanding", "adapter_affinity",
+                "cluster_affinity"]
+    n_requests = 600 if quick else 2000
+    rows = []
+    for n_rep in replicas:
+        for skew_name, alpha in skews:
+            wl = WorkloadSpec(
+                n_requests=n_requests, new_tokens=10,
+                popularity="uniform" if alpha == 0 else "zipf",
+                zipf_alpha=alpha,
+                arrival="poisson",
+                # saturating per-replica offered load (single-replica capacity
+                # is ~145 rps): throughput differences reflect steady state,
+                # not arrival gaps
+                arrival_rate=500.0 * n_rep)
+            for mode in ("lora", "jd"):
+                for policy in policies:
+                    t0 = time.perf_counter()
+                    stats = run_cell(cfg, n_adapters, n_rep, policy, mode, wl)
+                    dt = (time.perf_counter() - t0) * 1e6
+                    d = stats.to_dict()
+                    rows.append(csv_row(
+                        f"fleet_{mode}_{skew_name}_r{n_rep}_{policy}", dt,
+                        f"rps={d['throughput_rps']:.2f};"
+                        f"p50={d['latency_p50_s'] * 1e3:.1f}ms;"
+                        f"p99={d['latency_p99_s'] * 1e3:.1f}ms;"
+                        f"ttft_p95={d['ttft_p95_s'] * 1e3:.1f}ms;"
+                        f"swaps={d['n_swaps']};"
+                        "per_rep=" + "/".join(
+                            str(n) for n in d["per_replica_n_requests"])))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep for CI smoke")
+    args = ap.parse_args()
+    print("\n".join(main(quick=args.quick)))

@@ -31,4 +31,9 @@ def main(quick: bool = True):
 
 
 if __name__ == "__main__":
-    print("\n".join(main(quick=True)))
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep for CI smoke")
+    args = ap.parse_args()
+    print("\n".join(main(quick=args.quick)))

@@ -1,0 +1,20 @@
+"""jax version compatibility shims.
+
+The codebase targets current jax APIs; older releases (e.g. 0.4.x) keep the
+same functionality under different names.  Centralized here so call sites
+stay clean and a jax upgrade deletes this file.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:                                    # jax < 0.5: experimental namespace
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:                                    # jax < 0.6: psum of ones
+    def axis_size(axis_name):
+        return jax.lax.psum(1, axis_name)

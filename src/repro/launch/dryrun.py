@@ -102,6 +102,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
         rec["compile_s"] = round(time.time() - t1, 2)
 
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):     # jax<0.5 returns [dict]
+            ca = ca[0] if ca else {}
         flops_dev = float(ca.get("flops", 0.0))
         bytes_dev = float(ca.get("bytes accessed", 0.0))
         try:

@@ -35,10 +35,12 @@ class AdapterCache:
     def __init__(self, cfg: CacheConfig):
         self.cfg = cfg
         self._resident: "OrderedDict[int, int]" = OrderedDict()  # id -> bytes
+        self._inflight_prefetch: Dict[int, float] = {}  # id -> ready_at
         self._pinned_bytes = 0
         self._used = 0
         self.copy_engine_free_at = 0.0
         self.n_swaps = 0
+        self.n_prefetches = 0
         self.bytes_swapped = 0
 
     # -- sizing ------------------------------------------------------------
@@ -76,11 +78,14 @@ class AdapterCache:
         overlaps compute — the caller stalls only until the returned time."""
         if aid in self._resident:
             self._resident.move_to_end(aid)
-            return now
+            # promoted prefetch: usable once its background transfer lands
+            ready = self._inflight_prefetch.pop(aid, now)
+            return max(now, ready)
         # evict LRU until it fits
         while self._used + self._pinned_bytes + nbytes > self.capacity \
                 and self._resident:
-            _, b = self._resident.popitem(last=False)
+            evicted, b = self._resident.popitem(last=False)
+            self._inflight_prefetch.pop(evicted, None)
             self._used -= b
         if self._used + self._pinned_bytes + nbytes > self.capacity:
             raise MemoryError("adapter larger than total budget")
@@ -100,9 +105,32 @@ class AdapterCache:
         return t
 
     def prefetch(self, aid: int, nbytes: int, now: float) -> None:
-        """Opportunistic background load (does not stall the caller)."""
-        if not self.is_resident(aid):
-            self.ensure(aid, nbytes, now)
+        """Opportunistic background load at LOW priority.
+
+        Unlike :meth:`ensure`, a prefetch must never get in the way of the
+        demand path, so it
+
+        - does NOT advance ``copy_engine_free_at`` — a demand miss issued
+          right after a prefetch preempts it rather than queueing behind it;
+        - does NOT evict anything — it only fills otherwise-idle capacity;
+        - counts as ``n_prefetches``, not ``n_swaps``.
+
+        The loaded adapter becomes usable at its background completion time;
+        an :meth:`ensure` that arrives earlier stalls only until then
+        (promotion), never longer than a cold demand load would have.
+        """
+        if self.is_resident(aid):
+            return
+        if self._used + self._pinned_bytes + nbytes > self.capacity:
+            return                    # would need eviction: not worth it
+        start = max(now, self.copy_engine_free_at,
+                    max(self._inflight_prefetch.values(), default=0.0))
+        t_done = start + self.cfg.dma.latency + nbytes / self.cfg.dma.bandwidth
+        self._resident[aid] = nbytes
+        self._resident.move_to_end(aid, last=False)  # LRU: coldest entry
+        self._used += nbytes
+        self._inflight_prefetch[aid] = t_done
+        self.n_prefetches += 1
 
     @property
     def resident_ids(self) -> Set[int]:

@@ -122,7 +122,8 @@ class EngineConfig:
     scheduler: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
     adapter_budget_bytes: float = 2e9
     mode: str = "lora"               # lora | jd
-    prefetch: bool = True
+    prefetch: bool = False           # opportunistic warm-up of queued adapters
+    prefetch_depth: int = 4          # waiting-queue lookahead for prefetch
 
 
 class ServingEngine:
@@ -164,6 +165,19 @@ class ServingEngine:
             r.prefilled = True
             self.running.append(r)
 
+    def _prefetch_waiting(self) -> None:
+        """Opportunistically warm adapters of queued requests.  Low priority:
+        never stalls this step and never delays a later demand load (see
+        AdapterCache.prefetch)."""
+        if not self.cfg.prefetch:
+            return
+        for r in self.waiting[:self.cfg.prefetch_depth]:
+            if r.arrival_time > self.clock:     # not yet known to the engine
+                break
+            self.cache.prefetch(r.adapter_id,
+                                self.executor.adapter_bytes(r.adapter_id),
+                                self.clock)
+
     def step(self) -> bool:
         """One engine iteration; returns False when fully drained."""
         if not self.running and not self.waiting:
@@ -181,6 +195,7 @@ class ServingEngine:
                 r.adapter_id, self.executor.adapter_bytes(r.adapter_id),
                 self.clock))
         stall = max(0.0, t_ready - self.clock)
+        self._prefetch_waiting()
         t_step = self.executor.decode_step_time(self.running)
         self.clock += stall + t_step
         self.stats.swap_time += stall
@@ -188,10 +203,11 @@ class ServingEngine:
         self.stats.n_tokens += len(self.running)
         for r in self.running:
             r.generated += 1
+            if r.generated == 1:
+                r.first_token_time = self.clock
             if r.done:
                 r.finish_time = self.clock
-                self.stats.n_requests += 1
-                self.stats.sum_latency += r.latency
+                self.stats.record_finish(r)
                 if self.on_finish is not None:
                     self.on_finish(r)
         self.running = [r for r in self.running if not r.done]

@@ -1,8 +1,10 @@
-"""Serving request/response types."""
+"""Serving request/response types + per-request latency accounting."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional
+
+import numpy as np
 
 
 @dataclasses.dataclass
@@ -15,8 +17,10 @@ class Request:
     # runtime state
     generated: int = 0
     start_time: Optional[float] = None
+    first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     prefilled: bool = False
+    replica: Optional[int] = None    # set by fleet routing
 
     @property
     def done(self) -> bool:
@@ -28,6 +32,22 @@ class Request:
             return None
         return self.finish_time - self.arrival_time
 
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token (arrival -> first decoded token)."""
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Time per output token after the first (0 for 1-token requests)."""
+        if self.finish_time is None or self.first_token_time is None:
+            return None
+        if self.generated <= 1:
+            return 0.0
+        return (self.finish_time - self.first_token_time) / (self.generated - 1)
+
 
 @dataclasses.dataclass
 class ServeStats:
@@ -38,6 +58,18 @@ class ServeStats:
     compute_time: float = 0.0
     n_swaps: int = 0
     sum_latency: float = 0.0
+    latencies: List[float] = dataclasses.field(default_factory=list)
+    ttfts: List[float] = dataclasses.field(default_factory=list)
+    tpots: List[float] = dataclasses.field(default_factory=list)
+
+    def record_finish(self, req: Request) -> None:
+        self.n_requests += 1
+        self.sum_latency += req.latency
+        self.latencies.append(req.latency)
+        if req.ttft is not None:
+            self.ttfts.append(req.ttft)
+        if req.tpot is not None:
+            self.tpots.append(req.tpot)
 
     @property
     def throughput_rps(self) -> float:
@@ -51,6 +83,36 @@ class ServeStats:
     def mean_latency(self) -> float:
         return self.sum_latency / self.n_requests if self.n_requests else 0.0
 
+    @staticmethod
+    def _pct(xs: List[float], q: float) -> float:
+        return float(np.percentile(xs, q)) if xs else 0.0
+
+    def latency_pct(self, q: float) -> float:
+        return self._pct(self.latencies, q)
+
+    def ttft_pct(self, q: float) -> float:
+        return self._pct(self.ttfts, q)
+
+    def tpot_pct(self, q: float) -> float:
+        return self._pct(self.tpots, q)
+
+    @classmethod
+    def merged(cls, parts: List["ServeStats"]) -> "ServeStats":
+        """Fleet-level aggregate: additive counters, wall = slowest replica."""
+        out = cls()
+        for s in parts:
+            out.n_requests += s.n_requests
+            out.n_tokens += s.n_tokens
+            out.wall_time = max(out.wall_time, s.wall_time)
+            out.swap_time += s.swap_time
+            out.compute_time += s.compute_time
+            out.n_swaps += s.n_swaps
+            out.sum_latency += s.sum_latency
+            out.latencies.extend(s.latencies)
+            out.ttfts.extend(s.ttfts)
+            out.tpots.extend(s.tpots)
+        return out
+
     def to_dict(self):
         return {
             "n_requests": self.n_requests, "n_tokens": self.n_tokens,
@@ -59,4 +121,13 @@ class ServeStats:
             "throughput_rps": self.throughput_rps,
             "throughput_tps": self.throughput_tps,
             "mean_latency_s": self.mean_latency,
+            "latency_p50_s": self.latency_pct(50),
+            "latency_p95_s": self.latency_pct(95),
+            "latency_p99_s": self.latency_pct(99),
+            "ttft_p50_s": self.ttft_pct(50),
+            "ttft_p95_s": self.ttft_pct(95),
+            "ttft_p99_s": self.ttft_pct(99),
+            "tpot_p50_s": self.tpot_pct(50),
+            "tpot_p95_s": self.tpot_pct(95),
+            "tpot_p99_s": self.tpot_pct(99),
         }

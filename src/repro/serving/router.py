@@ -1,0 +1,177 @@
+"""Fleet-level serving: N engine replicas behind a pluggable router.
+
+The paper serves one replica; production serves fleets, and under skewed
+adapter popularity the *routing policy* decides how much pinned-base reuse
+each replica gets (S-LoRA §6; arXiv:2511.22880).  Policies:
+
+  "round_robin"        — classic stateless spread.
+  "least_outstanding"  — route to the replica with the fewest queued+running
+                         requests at arrival time (live state: the fleet
+                         advances each replica's simulated clock to the
+                         arrival before deciding).
+  "adapter_affinity"   — sticky adapter -> replica map; repeat requests for
+                         an adapter land where it is already warm.
+  "cluster_affinity"   — sticky JD-cluster -> replica map; co-locates
+                         adapters sharing a compressed basis so each replica
+                         streams few shared bases and maximizes pinned-base
+                         reuse.  Bounded work-balance spill (route to the
+                         least-loaded replica once the home replica is more
+                         than `spill_requests` requests' worth of work ahead
+                         of the lightest) prevents hot clusters from
+                         hot-spotting the fleet under Zipf skew.
+
+All policies are deterministic given the request stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+from .engine import CostModelExecutor, ServingEngine
+from .request import Request, ServeStats
+
+POLICIES = ("round_robin", "least_outstanding", "adapter_affinity",
+            "cluster_affinity")
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    n_replicas: int = 1
+    policy: str = "round_robin"
+    # affinity policies: allowed routed-work imbalance (home vs lightest
+    # replica) before a request spills, in units of average request work
+    spill_requests: float = 1.0
+
+
+@dataclasses.dataclass
+class FleetStats:
+    total: ServeStats
+    per_replica: List[ServeStats]
+
+    def to_dict(self) -> Dict:
+        d = self.total.to_dict()
+        d["n_replicas"] = len(self.per_replica)
+        d["per_replica_rps"] = [s.throughput_rps for s in self.per_replica]
+        d["per_replica_n_requests"] = [s.n_requests for s in self.per_replica]
+        return d
+
+
+class Fleet:
+    """Routes a request stream across replicas and runs them to completion.
+
+    Each replica is an independent :class:`ServingEngine` with its own
+    simulated clock; fleet wall time is the slowest replica's clock.
+    """
+
+    def __init__(self, cfg: FleetConfig, engines: Sequence[ServingEngine],
+                 cluster_of: Optional[Dict[int, int]] = None):
+        if len(engines) != cfg.n_replicas:
+            raise ValueError(f"expected {cfg.n_replicas} engines, "
+                             f"got {len(engines)}")
+        if cfg.policy not in POLICIES:
+            raise ValueError(f"unknown policy {cfg.policy!r}; "
+                             f"one of {POLICIES}")
+        self.cfg = cfg
+        self.engines = list(engines)
+        self.cluster_of = cluster_of or {}
+        self._rr = 0
+        self._home: Dict[int, int] = {}          # affinity key -> replica
+        self._routed_load: List[float] = [0.0] * len(engines)  # est. seconds
+        self.assignments: Dict[int, int] = {}    # rid -> replica
+
+    # -- live state helpers -------------------------------------------------
+    def _advance_to(self, t: float) -> None:
+        """Step every replica's simulation up to (at least) time t so that
+        queue-depth observations at an arrival are causal."""
+        for eng in self.engines:
+            while (eng.running or
+                   (eng.waiting and eng.waiting[0].arrival_time <= t)) \
+                    and eng.clock < t:
+                if not eng.step():
+                    break
+
+    def _outstanding(self, i: int) -> int:
+        eng = self.engines[i]
+        return len(eng.running) + len(eng.waiting)
+
+    def _least_outstanding(self, among: Optional[Sequence[int]] = None) -> int:
+        idxs = range(len(self.engines)) if among is None else among
+        return min(idxs, key=lambda i: (self._outstanding(i), i))
+
+    # -- policies -----------------------------------------------------------
+    def _route_round_robin(self, req: Request) -> int:
+        i = self._rr % len(self.engines)
+        self._rr += 1
+        return i
+
+    def _route_least_outstanding(self, req: Request) -> int:
+        self._advance_to(req.arrival_time)
+        return self._least_outstanding()
+
+    def _affinity_key(self, req: Request) -> int:
+        if self.cfg.policy == "cluster_affinity":
+            return self.cluster_of.get(req.adapter_id, req.adapter_id)
+        return req.adapter_id
+
+    def _route_affinity(self, req: Request) -> int:
+        key = self._affinity_key(req)
+        home = self._home.get(key)
+        lightest = min(range(len(self.engines)),
+                       key=lambda i: (self._routed_load[i], i))
+        if home is None:
+            # first sighting: place on the least-loaded replica so far
+            self._home[key] = lightest
+            return lightest
+        # bounded spill: sticky only while the home replica's routed work
+        # stays within `spill_requests` average requests of the lightest
+        slack = self.cfg.spill_requests * self._avg_request_work()
+        if self._routed_load[home] - self._routed_load[lightest] > slack:
+            return lightest
+        return home
+
+    def _avg_request_work(self) -> float:
+        n = len(self.assignments)
+        return (sum(self._routed_load) / n) if n else 0.0
+
+    def _work_estimate(self, req: Request) -> float:
+        """Estimated replica-seconds this request costs (prefill + its share
+        of full decode batches).  Falls back to a token count for executors
+        without a cost model."""
+        ex = self.engines[0].executor
+        # only the analytic executor is side-effect free to probe; a real
+        # executor's cost hooks actually run model steps
+        if isinstance(ex, CostModelExecutor):
+            bs = self.engines[0].cfg.scheduler.max_batch
+            step = ex.decode_step_time([req] * bs)
+            return ex.prefill_time(req) + req.max_new_tokens * step / bs
+        return float(req.prompt_len + req.max_new_tokens)
+
+    def _router(self) -> Callable[[Request], int]:
+        return {
+            "round_robin": self._route_round_robin,
+            "least_outstanding": self._route_least_outstanding,
+            "adapter_affinity": self._route_affinity,
+            "cluster_affinity": self._route_affinity,
+        }[self.cfg.policy]
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, requests: Sequence[Request]) -> None:
+        route = self._router()
+        for r in sorted(requests, key=lambda r: r.arrival_time):
+            i = route(r)
+            r.replica = i
+            self.assignments[r.rid] = i
+            self._routed_load[i] += self._work_estimate(r)
+            self.engines[i].submit([r])
+
+    def run(self, max_steps: int = 10_000_000) -> FleetStats:
+        per = [eng.run(max_steps) for eng in self.engines]
+        return FleetStats(total=ServeStats.merged(per), per_replica=per)
+
+    def replicas_of_adapter(self, requests: Sequence[Request]) -> Dict[int, set]:
+        """adapter_id -> set of replicas its requests were routed to."""
+        out: Dict[int, set] = {}
+        for r in requests:
+            if r.rid in self.assignments:
+                out.setdefault(r.adapter_id, set()).add(self.assignments[r.rid])
+        return out

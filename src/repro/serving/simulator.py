@@ -1,10 +1,18 @@
-"""Workload generation + the paper's throughput study driver (Figs. 1 & 4).
+"""The paper's throughput study driver (Figs. 1 & 4), fleet-capable.
 
 Replicates §6.4's setup in v5e terms: N unique rank-16 LoRAs, asynchronous
 request arrivals, inputs assigned to adapters uniformly at random, ten
 generated tokens per request; memory-matched baseline (Appendix F): the
 uncompressed engine gets an adapter budget equal to what the compressed
 configuration consumes (shared bases + all Sigmas).
+
+The study now drives a :class:`repro.serving.router.Fleet` through the
+workload generator in :mod:`repro.serving.workload`.  The default
+configuration — one replica, uniform popularity, round-robin routing — is
+the special case that reproduces the original single-replica numbers
+bit-exactly; `FleetConfig(n_replicas=..., policy=...)` plus a skewed
+`WorkloadSpec` opens the production scenarios (Zipf popularity, bursty
+arrivals, affinity routing).
 """
 from __future__ import annotations
 
@@ -17,34 +25,12 @@ from repro.serving.engine import (CostModelExecutor, EngineConfig,
                                   ModelFootprint, ServingEngine,
                                   ServingHardware)
 from repro.serving.request import Request
+from repro.serving.router import Fleet, FleetConfig
 from repro.serving.scheduler import SchedulerConfig
+from repro.serving.workload import WorkloadSpec, make_workload
 
-
-@dataclasses.dataclass
-class WorkloadConfig:
-    n_requests: int = 1000
-    n_adapters: int = 64
-    prompt_len_mean: int = 128       # sonnet-ish prompts
-    prompt_len_std: int = 32
-    new_tokens: int = 10             # paper: ten tokens per request
-    arrival_rate: float = 0.0        # req/s Poisson; 0 = all at t=0
-    seed: int = 0
-
-
-def make_workload(cfg: WorkloadConfig) -> List[Request]:
-    rng = np.random.default_rng(cfg.seed)
-    t = 0.0
-    out = []
-    for i in range(cfg.n_requests):
-        if cfg.arrival_rate > 0:
-            t += rng.exponential(1.0 / cfg.arrival_rate)
-        plen = int(np.clip(rng.normal(cfg.prompt_len_mean, cfg.prompt_len_std),
-                           16, 4 * cfg.prompt_len_mean))
-        out.append(Request(rid=i,
-                           adapter_id=int(rng.integers(cfg.n_adapters)),
-                           prompt_len=plen, max_new_tokens=cfg.new_tokens,
-                           arrival_time=t))
-    return out
+# Backwards-compatible names: the workload generator used to live here.
+WorkloadConfig = WorkloadSpec
 
 
 # paper Appendix F: compression setting per collection size
@@ -65,55 +51,85 @@ def compression_setting(n_adapters: int) -> Dict:
     return PAPER_SETTINGS[keys[-1]]
 
 
+def memory_matched_setup(model_cfg, n_adapters: int,
+                         cluster_assign_seed: int = 0):
+    """Appendix-F memory matching for a collection size.
+
+    Returns (setting, cluster_of, budget): the paper's compression setting,
+    a seeded random cluster assignment, and the per-replica adapter budget —
+    the uncompressed baseline gets exactly what the compressed configuration
+    consumes (shared bases + all Sigmas), floored at two resident LoRAs."""
+    setting = compression_setting(n_adapters)
+    rng = np.random.default_rng(cluster_assign_seed)
+    cluster_of = {a: int(rng.integers(setting["clusters"]))
+                  for a in range(n_adapters)}
+    fp_jd = ModelFootprint.from_config(model_cfg, jd_rank=setting["rank"],
+                                       n_clusters=setting["clusters"])
+    fp_lora = ModelFootprint.from_config(model_cfg)
+    jd_total = (fp_jd.jd_shared_bytes_per_cluster * setting["clusters"]
+                + n_adapters * fp_jd.jd_sigma_bytes_per_adapter)
+    budget = max(jd_total, 2 * fp_lora.lora_bytes_per_adapter)
+    return setting, cluster_of, budget
+
+
+def build_fleet(model_cfg, mode: str, n_adapters: int, budget: float,
+                fleet_cfg: FleetConfig, hw: ServingHardware,
+                cluster_of: Dict[int, int], setting: Dict,
+                max_batch: int = 32, prefetch: bool = False) -> Fleet:
+    """N identical replicas of the cost-model engine for `mode`.
+
+    Budget is per replica (each replica owns an HBM adapter region)."""
+    if mode == "jd":
+        fp = ModelFootprint.from_config(model_cfg, jd_rank=setting["rank"],
+                                        n_clusters=setting["clusters"])
+    else:
+        fp = ModelFootprint.from_config(model_cfg)
+        if n_adapters <= 1:            # merged single-LoRA reference
+            fp = dataclasses.replace(fp, lora_bytes_per_adapter=0)
+    engines = []
+    for _ in range(fleet_cfg.n_replicas):
+        ex = CostModelExecutor(hw, fp, mode, cluster_of)
+        engines.append(ServingEngine(
+            EngineConfig(scheduler=SchedulerConfig(max_batch=max_batch),
+                         adapter_budget_bytes=budget, mode=mode,
+                         prefetch=prefetch),
+            ex, cluster_of))
+    return Fleet(fleet_cfg, engines, cluster_of)
+
+
 def run_throughput_study(model_cfg, n_adapters_list: List[int],
-                         workload: Optional[WorkloadConfig] = None,
+                         workload: Optional[WorkloadSpec] = None,
                          hw: Optional[ServingHardware] = None,
                          max_batch: int = 32,
-                         cluster_assign_seed: int = 0) -> List[Dict]:
+                         cluster_assign_seed: int = 0,
+                         fleet: Optional[FleetConfig] = None,
+                         prefetch: bool = False) -> List[Dict]:
     """Compressed vs uncompressed vs single-LoRA throughput across N."""
     hw = hw or ServingHardware()
+    fleet_cfg = fleet or FleetConfig()
     rows = []
     for n in n_adapters_list:
-        wl = dataclasses.replace(workload or WorkloadConfig(), n_adapters=n)
-        setting = compression_setting(n)
-        rng = np.random.default_rng(cluster_assign_seed)
-        cluster_of = {a: int(rng.integers(setting["clusters"]))
-                      for a in range(n)}
-
-        fp_jd = ModelFootprint.from_config(model_cfg, jd_rank=setting["rank"],
-                                           n_clusters=setting["clusters"])
-        fp_lora = ModelFootprint.from_config(model_cfg)
-
-        # memory matching (App F): baseline budget = compressed footprint
-        jd_total = (fp_jd.jd_shared_bytes_per_cluster * setting["clusters"]
-                    + n * fp_jd.jd_sigma_bytes_per_adapter)
-        budget = max(jd_total, 2 * fp_lora.lora_bytes_per_adapter)
+        wl = dataclasses.replace(workload or WorkloadSpec(), n_adapters=n)
+        setting, cluster_of, budget = memory_matched_setup(
+            model_cfg, n, cluster_assign_seed)
 
         results = {}
-        for mode, fp in (("jd", fp_jd), ("lora", fp_lora)):
-            ex = CostModelExecutor(hw, fp, mode, cluster_of)
-            eng = ServingEngine(
-                EngineConfig(scheduler=SchedulerConfig(max_batch=max_batch),
-                             adapter_budget_bytes=budget, mode=mode),
-                ex, cluster_of)
-            eng.submit(make_workload(wl))
-            stats = eng.run()
-            results[mode] = stats.to_dict()
+        for mode in ("jd", "lora"):
+            fl = build_fleet(model_cfg, mode, n, budget, fleet_cfg, hw,
+                             cluster_of, setting, max_batch, prefetch)
+            fl.submit(make_workload(wl))
+            results[mode] = fl.run().to_dict()
 
         # single-LoRA reference (merged into base: no adapter overhead)
-        fp_single = ModelFootprint.from_config(model_cfg)
-        fp_single = dataclasses.replace(fp_single, lora_bytes_per_adapter=0)
-        ex1 = CostModelExecutor(hw, fp_single, "lora", {})
-        wl1 = dataclasses.replace(wl, n_adapters=1)
-        eng1 = ServingEngine(
-            EngineConfig(scheduler=SchedulerConfig(max_batch=max_batch),
-                         adapter_budget_bytes=budget, mode="lora"), ex1, {})
-        eng1.submit(make_workload(wl1))
-        results["single"] = eng1.run().to_dict()
+        fl1 = build_fleet(model_cfg, "lora", 1, budget, fleet_cfg, hw, {},
+                          setting, max_batch, prefetch)
+        fl1.submit(make_workload(dataclasses.replace(wl, n_adapters=1)))
+        results["single"] = fl1.run().to_dict()
 
         rows.append({
             "n_adapters": n, "setting": setting,
             "budget_bytes": budget,
+            "n_replicas": fleet_cfg.n_replicas, "policy": fleet_cfg.policy,
             "jd": results["jd"], "lora": results["lora"],
             "single": results["single"],
             "throughput_ratio_jd_vs_lora":

@@ -64,6 +64,7 @@ def _make_counter_runner(tmp_path, plan, ckpt_every=2):
                                save_fn, restore_fn, plan=plan), saves
 
 
+@pytest.mark.slow
 def test_restart_resumes_and_matches_no_failure_run(tmp_path):
     clean, _ = _make_counter_runner(tmp_path, FailurePlan())
     ref = clean.run({"v": 1}, 9)
@@ -107,6 +108,7 @@ print("elastic restore ok")
 """
 
 
+@pytest.mark.slow
 def test_elastic_restore_different_mesh():
     r = subprocess.run([sys.executable, "-c", ELASTIC_SCRIPT],
                        capture_output=True, text=True,
@@ -116,6 +118,7 @@ def test_elastic_restore_different_mesh():
     assert "elastic restore ok" in r.stdout
 
 
+@pytest.mark.slow
 def test_train_resume_bitwise(tmp_path):
     """Full train loop: crash at step 7, resume from step-5 ckpt, final
     params identical to an uninterrupted run (deterministic data pipeline)."""

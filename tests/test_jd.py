@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (see requirements.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (CompressionConfig, LoRABank, compress_bank,

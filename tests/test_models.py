@@ -27,7 +27,16 @@ def _make_batch(cfg, shape, key):
     return out
 
 
-@pytest.mark.parametrize("arch", ASSIGNED)
+FAST_ARCHS = ("qwen3-1.7b", "qwen3-32b", "mistral-large-123b")
+
+
+def _lane(archs):
+    """Heavy reduced-arch params run in the slow CI lane only."""
+    return [pytest.param(a, marks=[] if a in FAST_ARCHS else
+                         [pytest.mark.slow]) for a in archs]
+
+
+@pytest.mark.parametrize("arch", _lane(ASSIGNED))
 def test_smoke_train_step(arch):
     cfg = smoke_config(arch)
     defs = tf.model_defs(cfg)
@@ -45,9 +54,9 @@ def test_smoke_train_step(arch):
     assert jnp.isfinite(l2) and gn > 0
 
 
-@pytest.mark.parametrize("arch", ["qwen3-1.7b", "deepseek-moe-16b",
-                                  "mamba2-2.7b", "zamba2-2.7b",
-                                  "whisper-small", "pixtral-12b"])
+@pytest.mark.parametrize("arch", _lane(["qwen3-1.7b", "deepseek-moe-16b",
+                                        "mamba2-2.7b", "zamba2-2.7b",
+                                        "whisper-small", "pixtral-12b"]))
 def test_decode_matches_full_forward(arch):
     cfg = smoke_config(arch)
     defs = tf.model_defs(cfg)

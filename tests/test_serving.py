@@ -111,3 +111,22 @@ def test_throughput_ratio_grows_with_n():
     r4, r256 = rows[0], rows[1]
     assert r256["throughput_ratio_jd_vs_lora"] > r4["throughput_ratio_jd_vs_lora"]
     assert r256["jd_frac_of_single"] > 0.8     # paper: >= 80% of single-LoRA
+
+
+def test_single_replica_uniform_reproduces_seed_numbers():
+    """The fleet refactor keeps the original single-replica uniform study as
+    a special case: these values were captured from the pre-fleet seed code
+    and must keep reproducing (tolerance covers float noise only)."""
+    cfg = get_config("mistral-7b")
+    rows = run_throughput_study(
+        cfg, [4, 64, 256], WorkloadConfig(n_requests=150, new_tokens=10))
+    seed = {4: (146.11467216655996, 111.18997706172227),
+            64: (145.1476526239968, 56.26989433898296),
+            256: (144.9412976690654, 50.259192942710385)}
+    for row in rows:
+        jd_rps, lora_rps = seed[row["n_adapters"]]
+        assert row["jd"]["throughput_rps"] == pytest.approx(jd_rps, rel=1e-9)
+        assert row["lora"]["throughput_rps"] == pytest.approx(lora_rps,
+                                                              rel=1e-9)
+        assert row["single"]["throughput_rps"] == pytest.approx(
+            145.66018734248797, rel=1e-9)

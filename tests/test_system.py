@@ -16,6 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow    # 80s+ training fixture: slow CI lane
+
 from repro.configs import smoke_config
 from repro.core import CompressionConfig, compress_bank, stack_bank
 from repro.data import tasks as T

@@ -3,6 +3,10 @@ bound — see DESIGN.md §8 / theory.py for the Jensen-factor finding)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (see requirements.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.jd import jd_full, normalize_bank, reconstruction_errors
