@@ -1,0 +1,82 @@
+"""CI perf gate: compare a benchmark JSON against its committed baseline.
+
+The serving benchmarks emit deterministic simulated-clock metrics (request
+throughput from the cost model, not host wall time), so they are stable
+across CI machines and can be gated tightly.  A cell regressing more than
+``--tolerance`` (default 10%) below baseline fails the job; improvements
+are reported so baselines can be ratcheted.
+
+Usage (see .github/workflows/ci.yml):
+
+    python -m benchmarks.serving_throughput --quick --json BENCH_serving.json
+    python -m benchmarks.check_regression BENCH_serving.json \
+        benchmarks/baselines/BENCH_serving.json
+
+Baselines are regenerated with the same commands and committed whenever a
+deliberate perf change lands.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# metrics where larger is better (throughputs); a latency metric would be
+# gated in the opposite direction if one is ever added here
+HIGHER_IS_BETTER = ("rps",)
+
+
+def compare(current: dict, baseline: dict, tolerance: float):
+    """Yields (kind, message); kind in {"fail", "warn", "info"}."""
+    for name in sorted(baseline):
+        if name not in current:
+            yield "fail", f"{name}: missing from current run"
+            continue
+        for metric, base_val in sorted(baseline[name].items()):
+            if not any(metric.endswith(h) for h in HIGHER_IS_BETTER):
+                continue
+            cur_val = current[name].get(metric)
+            if cur_val is None:
+                yield "fail", f"{name}.{metric}: missing from current run"
+                continue
+            if base_val <= 0:
+                continue
+            ratio = cur_val / base_val
+            if ratio < 1.0 - tolerance:
+                yield "fail", (f"{name}.{metric}: {cur_val:.2f} vs baseline "
+                               f"{base_val:.2f} ({(1 - ratio) * 100:.1f}% "
+                               f"regression > {tolerance * 100:.0f}%)")
+            elif ratio > 1.0 + tolerance:
+                yield "info", (f"{name}.{metric}: {cur_val:.2f} vs baseline "
+                               f"{base_val:.2f} (+{(ratio - 1) * 100:.1f}% — "
+                               "consider ratcheting the baseline)")
+    for name in sorted(set(current) - set(baseline)):
+        yield "info", f"{name}: new cell (not in baseline)"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="JSON written by a benchmark's --json")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed fractional regression (default 0.10)")
+    args = ap.parse_args(argv)
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = 0
+    for kind, msg in compare(current, baseline, args.tolerance):
+        print(f"[{kind}] {msg}")
+        failures += kind == "fail"
+    if failures:
+        print(f"FAIL: {failures} metric(s) regressed beyond "
+              f"{args.tolerance * 100:.0f}% (baseline {args.baseline})")
+        return 1
+    print(f"OK: no regression beyond {args.tolerance * 100:.0f}% "
+          f"({args.baseline})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,7 +3,6 @@ compression setting across methods, on structured collections."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import (cluster_jd, clustered_reconstruction_errors, jd_diag,
                         jd_full_eig, normalize_bank, parameter_counts,

@@ -1,0 +1,125 @@
+"""Disaggregated serving study: prefill:decode ratio x skew x SLO target.
+
+Three questions the colocated fleet study cannot answer:
+
+1. **Tiering** — how does throughput/TTFT move as prefill capacity is traded
+   against decode capacity (prefill:decode ratio) once prefill leaves the
+   decode replicas' admission loop (no head-of-line blocking)?
+2. **Skew** — does JD cluster-affinity decode placement keep its win when
+   decode replicas no longer run prefill?
+3. **Elasticity** — given a TTFT SLO, how many decode replicas does the
+   autoscaler actually provision under bursty (Gamma, CV=4) arrivals, and
+   does it meet SLOs a fixed fleet misses?
+
+Workload is decode-bound (32 generated tokens) so the decode tier is the
+scaled resource.  CSV columns: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Optional
+
+from repro.configs import get_config
+from repro.serving.autoscaler import AutoscalerConfig, SLOConfig
+from repro.serving.prefill import PrefillConfig
+from repro.serving.router import FleetConfig
+from repro.serving.simulator import run_elastic_study
+from repro.serving.workload import WorkloadSpec, make_workload
+
+try:
+    from .common import csv_row
+except ImportError:                      # run as a script, not a module
+    from common import csv_row
+
+N_ADAPTERS = 256
+
+
+def bursty_workload(n_requests: int, alpha: float,
+                    seed: int = 0) -> WorkloadSpec:
+    return WorkloadSpec(
+        n_requests=n_requests, n_adapters=N_ADAPTERS, new_tokens=32,
+        popularity="uniform" if alpha == 0 else "zipf", zipf_alpha=alpha,
+        arrival="gamma", arrival_rate=400.0, burst_cv=4.0, seed=seed)
+
+
+def fixed_cell(cfg, wl: WorkloadSpec, n_prefill: int, n_decode: int,
+               mode: str = "jd"):
+    prefill = (PrefillConfig(n_workers=n_prefill) if n_prefill else None)
+    return run_elastic_study(
+        cfg, mode, N_ADAPTERS, make_workload(wl),
+        FleetConfig(n_replicas=n_decode, policy="cluster_affinity"),
+        prefill_cfg=prefill)
+
+
+def autoscaled_cell(cfg, wl: WorkloadSpec, n_prefill: int, slo_ttft: float,
+                    mode: str = "jd", max_replicas: int = 12):
+    return run_elastic_study(
+        cfg, mode, N_ADAPTERS, make_workload(wl),
+        FleetConfig(n_replicas=2, policy="cluster_affinity"),
+        prefill_cfg=PrefillConfig(n_workers=n_prefill),
+        autoscaler_cfg=AutoscalerConfig(
+            min_replicas=2, max_replicas=max_replicas,
+            decision_interval=0.05, cooldown_intervals=1, max_step=2),
+        slo=SLOConfig(ttft_p95=slo_ttft))
+
+
+def main(quick: bool = True, json_path: Optional[str] = None):
+    cfg = get_config("mistral-7b")
+    n_requests = 600 if quick else 1600
+    ratios = [(0, 4), (2, 4), (4, 4)] if quick else \
+        [(0, 4), (1, 4), (2, 4), (4, 4), (2, 8), (4, 8)]
+    skews = [("zipf1.0", 1.0)] if quick else [("uniform", 0.0),
+                                              ("zipf1.0", 1.0)]
+    slos = [0.35] if quick else [0.15, 0.35, 0.75]
+    rows = []
+    metrics = {}
+
+    for skew_name, alpha in skews:
+        wl = bursty_workload(n_requests, alpha)
+        # -- fixed fleets across prefill:decode ratios (0 = colocated) ------
+        for n_pf, n_dec in ratios:
+            t0 = time.perf_counter()
+            stats = fixed_cell(cfg, wl, n_pf, n_dec)
+            dt = (time.perf_counter() - t0) * 1e6
+            d = stats.to_dict()
+            name = f"disagg_jd_{skew_name}_p{n_pf}d{n_dec}"
+            derived = (f"rps={d['throughput_rps']:.2f};"
+                       f"ttft_p95={d['ttft_p95_s'] * 1e3:.1f}ms;"
+                       f"tpot_p95={d['tpot_p95_s'] * 1e3:.2f}ms;"
+                       f"swaps={d['n_swaps']}")
+            if n_pf:
+                derived += (f";kv_xfer={d['kv_transfer_s'] * 1e3:.1f}ms;"
+                            f"n_prefills={d['n_prefills']}")
+            rows.append(csv_row(name, dt, derived))
+            metrics[name] = {"rps": d["throughput_rps"]}
+        # -- autoscaled fleets across TTFT SLO targets ----------------------
+        for slo in slos:
+            t0 = time.perf_counter()
+            stats = autoscaled_cell(cfg, wl, n_prefill=4, slo_ttft=slo)
+            dt = (time.perf_counter() - t0) * 1e6
+            d = stats.to_dict()
+            name = f"disagg_jd_{skew_name}_auto_slo{int(slo * 1e3)}ms"
+            rows.append(csv_row(
+                name, dt,
+                f"rps={d['throughput_rps']:.2f};"
+                f"ttft_p95={d['ttft_p95_s'] * 1e3:.1f}ms;"
+                f"met_slo={d['ttft_p95_s'] <= slo};"
+                f"n_final={d['n_replicas_final']};"
+                f"scale_events={d['scale_events']}"))
+            metrics[name] = {"rps": d["throughput_rps"]}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep for CI smoke")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write deterministic metrics as JSON")
+    args = ap.parse_args()
+    print("\n".join(main(quick=args.quick, json_path=args.json)))

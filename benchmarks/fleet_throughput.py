@@ -13,7 +13,9 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
+from typing import Optional
 
 from repro.configs import get_config
 from repro.serving.router import FleetConfig
@@ -41,7 +43,7 @@ def run_cell(model_cfg, n_adapters: int, n_replicas: int, policy: str,
     return fleet.run()
 
 
-def main(quick: bool = True):
+def main(quick: bool = True, json_path: Optional[str] = None):
     cfg = get_config("mistral-7b")
     n_adapters = 256
     replicas = [4] if quick else [1, 2, 4, 8]
@@ -50,6 +52,7 @@ def main(quick: bool = True):
                 "cluster_affinity"]
     n_requests = 600 if quick else 2000
     rows = []
+    metrics = {}
     for n_rep in replicas:
         for skew_name, alpha in skews:
             wl = WorkloadSpec(
@@ -67,8 +70,9 @@ def main(quick: bool = True):
                     stats = run_cell(cfg, n_adapters, n_rep, policy, mode, wl)
                     dt = (time.perf_counter() - t0) * 1e6
                     d = stats.to_dict()
+                    name = f"fleet_{mode}_{skew_name}_r{n_rep}_{policy}"
                     rows.append(csv_row(
-                        f"fleet_{mode}_{skew_name}_r{n_rep}_{policy}", dt,
+                        name, dt,
                         f"rps={d['throughput_rps']:.2f};"
                         f"p50={d['latency_p50_s'] * 1e3:.1f}ms;"
                         f"p99={d['latency_p99_s'] * 1e3:.1f}ms;"
@@ -76,6 +80,11 @@ def main(quick: bool = True):
                         f"swaps={d['n_swaps']};"
                         "per_rep=" + "/".join(
                             str(n) for n in d["per_replica_n_requests"])))
+                    # simulated-clock metrics: deterministic, gateable
+                    metrics[name] = {"rps": d["throughput_rps"]}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
     return rows
 
 
@@ -83,5 +92,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="small sweep for CI smoke")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write deterministic metrics as JSON "
+                         "(CI perf gate; see benchmarks/check_regression.py)")
     args = ap.parse_args()
-    print("\n".join(main(quick=args.quick)))
+    print("\n".join(main(quick=args.quick, json_path=args.json)))

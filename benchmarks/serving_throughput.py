@@ -2,14 +2,16 @@
 serving vs collection size (memory-matched, v5e cost model)."""
 from __future__ import annotations
 
+import json
 import time
+from typing import Optional
 
 from repro.configs import get_config
 from repro.serving.simulator import WorkloadConfig, run_throughput_study
 from .common import csv_row
 
 
-def main(quick: bool = True):
+def main(quick: bool = True, json_path: Optional[str] = None):
     cfg = get_config("mistral-7b")
     ns = [4, 16, 64, 256, 1024] if quick else [4, 8, 16, 32, 64, 128, 256,
                                                512, 1024]
@@ -19,6 +21,7 @@ def main(quick: bool = True):
                                 new_tokens=10))
     dt = (time.perf_counter() - t0) / len(ns)
     rows = []
+    metrics = {}
     for r in rows_raw:
         rows.append(csv_row(
             f"serve_n{r['n_adapters']}", dt * 1e6,
@@ -27,6 +30,15 @@ def main(quick: bool = True):
             f"ratio={r['throughput_ratio_jd_vs_lora']:.2f};"
             f"frac_single={r['jd_frac_of_single']:.3f};"
             f"lora_swaps={r['lora']['n_swaps']}"))
+        # simulated-clock metrics only: deterministic, safe to regression-gate
+        metrics[f"serve_n{r['n_adapters']}"] = {
+            "jd_rps": r["jd"]["throughput_rps"],
+            "lora_rps": r["lora"]["throughput_rps"],
+            "single_rps": r["single"]["throughput_rps"],
+        }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
     return rows
 
 
@@ -35,5 +47,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="small sweep for CI smoke")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write deterministic metrics as JSON "
+                         "(CI perf gate; see benchmarks/check_regression.py)")
     args = ap.parse_args()
-    print("\n".join(main(quick=args.quick)))
+    print("\n".join(main(quick=args.quick, json_path=args.json)))

@@ -8,7 +8,6 @@
 3. Serve the same workload with the JD-compressed collection.
 4. Run the paper-scale (Fig. 1) throughput study with the v5e cost model.
 """
-import json
 
 from repro.configs import get_config, smoke_config
 from repro.launch.serve import run_real

@@ -5,7 +5,6 @@ checkpointing, fault-tolerant runner.
     PYTHONPATH=src python examples/train_100m.py [--steps 300]
 """
 import argparse
-import dataclasses
 
 from repro.configs.base import LoRAConfig, ModelConfig
 from repro.launch.train import train_full

@@ -29,7 +29,7 @@ def main():
                   key=lambda d: (d["arch"], d["shape"], d.get("variant", "")))
 
     # benchmark CSV (quick mode)
-    bench = subprocess.run(
+    subprocess.run(
         [sys.executable, "-m", "benchmarks.compression_quality"],
         capture_output=True, text=True, cwd=ROOT,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})

@@ -18,7 +18,7 @@ import shutil
 import threading
 import time
 from pathlib import Path
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +55,13 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, *,
                     keep: int = 3, blocking: bool = True,
                     _async_state: dict = _ASYNC_STATE) -> str:
     """Write `tree` under ckpt_dir/step_N (atomic rename)."""
+    # join any in-flight async save BEFORE touching tmp dirs: a previous
+    # save of the same step (e.g. re-reached after a crash/restart) may
+    # still be writing into .tmp_step_N, and deleting it mid-write races
+    # the writer thread (rmtree fails with "Directory not empty")
+    prev: Optional[threading.Thread] = _async_state.get("thread")
+    if prev is not None and prev.is_alive():
+        prev.join()
     base = Path(ckpt_dir)
     base.mkdir(parents=True, exist_ok=True)
     tmp = base / f".tmp_step_{step}"
@@ -85,9 +92,6 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, *,
     if blocking:
         write()
     else:
-        prev: Optional[threading.Thread] = _async_state.get("thread")
-        if prev is not None and prev.is_alive():
-            prev.join()
         t = threading.Thread(target=write, daemon=True)
         t.start()
         _async_state["thread"] = t

@@ -7,7 +7,6 @@ specific blocks (MoE / SSM / enc-dec / hybrid) are optional sub-configs.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Tuple
 
 

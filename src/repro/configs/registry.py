@@ -8,7 +8,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict
 
-from .base import (EncDecConfig, HybridConfig, LoRAConfig, ModelConfig,
+from .base import (EncDecConfig, HybridConfig, ModelConfig,
                    MoEConfig, SSMConfig, VLMConfig)
 
 _REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}

@@ -15,8 +15,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .jd import (JDResult, jd_full, jd_full_eig, product_frob_norms,
-                 reconstruction_errors)
+from .jd import JDResult, jd_full, jd_full_eig, product_frob_norms
 
 Array = jax.Array
 

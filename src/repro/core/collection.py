@@ -17,9 +17,7 @@ from typing import Callable, Dict, Mapping, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from . import jd as jd_mod
 from .cluster import ClusteredJD, cluster_jd, clustered_reconstruction_errors
 from .jd import (JDResult, jd_diag, jd_full, jd_full_eig, normalize_bank,
                  reconstruction_errors, svd_per_lora, svd_reconstruction_errors,

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .jd import JDResult, product_frob_norms
+from .jd import JDResult
 
 Array = jax.Array
 

@@ -10,7 +10,7 @@ learn genuinely different adapters (verified by cross-task eval in tests).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 

@@ -12,7 +12,6 @@ below is used on CPU and in the dry-run.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +50,6 @@ def seq_sharded_decode_attention(q: Array, keys: Array, vals: Array,
     S over `axis`; kv_len: (B,).  Returns (B,1,H,hd)."""
     B, _, H, hd = q.shape
     Kv = keys.shape[2]
-    G = H // Kv
     batch_axes = tuple(n for n in mesh.axis_names if n != axis)
     bspec = batch_axes if len(batch_axes) > 1 else (
         batch_axes[0] if batch_axes else None)
@@ -90,7 +88,6 @@ def seq_sharded_decode_step(q: Array, cache_k: Array, cache_v: Array,
     (B,S,Kv,hd) sharded on S; idx: (B,) or scalar current lengths.
     Returns (out (B,1,H,hd), new_cache_k, new_cache_v)."""
     B, _, H, hd = q.shape
-    Kv = cache_k.shape[2]
     batch_axes = tuple(n for n in mesh.axis_names if n != axis)
     bspec = batch_axes if len(batch_axes) > 1 else (
         batch_axes[0] if batch_axes else None)

@@ -13,7 +13,6 @@ error (bounded by 2/127 per hop).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

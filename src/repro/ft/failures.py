@@ -18,7 +18,6 @@ This module is exercised by tests/test_ft.py with real failure injection.
 from __future__ import annotations
 
 import dataclasses
-import random
 import time
 from typing import Callable, Dict, List, Optional
 

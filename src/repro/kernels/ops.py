@@ -5,8 +5,6 @@ mode in tests; the jnp refs serve CPU execution and the SPMD dry-run (Pallas
 TPU kernels do not lower on the forced-host-device CPU backend)."""
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +12,7 @@ import jax.numpy as jnp
 from . import ref as ref_mod
 from .flash_decode import flash_decode as _flash_decode_pallas
 from .jd_apply import jd_apply as _jd_apply_pallas
-from .sgmv import sgmv_expand, sgmv_shrink, sigma_bmm
+from .sgmv import sgmv_expand, sgmv_shrink
 
 Array = jax.Array
 

@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 import re
 from collections import Counter
-from typing import Dict, Optional
+from typing import Dict
 
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes / s / chip
@@ -51,7 +51,6 @@ _GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 def _result_bytes(line: str) -> int:
     """Sum bytes of all result shapes on an HLO instruction line (handles
     tuple results; only looks left of the op name occurrence)."""
-    lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1]
     # restrict to result type: text between '=' and the op name
     m = re.search(r"=\s*(.*?)\s+(" + "|".join(_COLLECTIVES) + r")", line)
     if not m:

@@ -16,7 +16,6 @@ import json
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.serving.engine import EngineConfig, ServingEngine
@@ -68,7 +67,10 @@ def run_real(cfg, n_adapters: int, n_requests: int, mode: str = "jd",
         adapter_budget_bytes=1e12, mode="lora"), ex)
     wl = WorkloadConfig(n_requests=n_requests, n_adapters=n_adapters,
                         prompt_len_mean=24, prompt_len_std=4, new_tokens=8)
-    eng.on_finish = lambda req: ex.release(req.rid)
+    def _release(req):
+        ex.release(req.rid)
+
+    eng.on_finish = _release
     eng.submit(make_workload(wl))
     stats = eng.run()
     return stats.to_dict()

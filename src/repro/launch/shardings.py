@@ -1,15 +1,13 @@
 """Per-cell sharding assembly: params (TP / TP+FSDP), batch, cache, opt."""
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig
 from repro.distributed.sharding import DEFAULT_RULES, spec_for
-from repro.models.param import param_specs
 
 # FSDP: weight d_model dims additionally sharded over the batch axes (train)
 TRAIN_PARAM_RULES = {**DEFAULT_RULES, "d_model": ("pod", "data")}

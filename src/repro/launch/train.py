@@ -14,7 +14,6 @@ Examples
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import time
 from pathlib import Path
@@ -25,7 +24,8 @@ import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.checkpoint.checkpoint import (latest_step, restore_checkpoint,
-                                         save_checkpoint)
+                                         save_checkpoint,
+                                         wait_for_async_saves)
 from repro.data.pipeline import TaskDataLoader
 from repro.data.tasks import make_task
 from repro.ft.failures import FTConfig, FaultTolerantRunner
@@ -60,6 +60,9 @@ def train_full(cfg, steps: int, batch: int, seq: int, ckpt_dir: str,
         save_checkpoint(ckpt_dir, step, state, blocking=False)
 
     def restore():
+        # a save issued just before the failure may still be in flight;
+        # land it so restart resumes from the newest checkpoint
+        wait_for_async_saves()
         ls = latest_step(ckpt_dir)
         if ls is None:
             return None

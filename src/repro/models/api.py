@@ -6,15 +6,13 @@ used by the multi-pod dry-run and the smoke tests alike.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import transformer as tf
-from repro.models.param import abstract_params, init_params
 
 Array = jax.Array
 

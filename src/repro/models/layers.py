@@ -9,7 +9,7 @@ logical sharding constraints so the same code lowers on any mesh.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

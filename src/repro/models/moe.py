@@ -17,7 +17,7 @@ Token dropping follows the standard static-capacity discipline
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -210,7 +210,6 @@ def ssm_block_fwd(p: Dict, x: Array, cfg: ModelConfig, *,
     """Full Mamba2 block: proj -> causal conv -> SSD -> gated norm -> out."""
     B, S, _ = x.shape
     s = cfg.ssm
-    H = s.n_heads(cfg.d_model)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
     z, xbc, dt = _project(p, x, cfg, lora_ctx)
 

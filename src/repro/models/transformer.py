@@ -9,7 +9,6 @@ decoder stack with cross-attention.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -373,9 +372,11 @@ def forward(params: Dict, cfg: ModelConfig, *,
         if cache is not None:
             ks, vs = [], []
             if fk:
-                ks.append(ys_d[0]); vs.append(ys_d[1])
+                ks.append(ys_d[0])
+                vs.append(ys_d[1])
             if ys_m is not None:
-                ks.append(ys_m[0]); vs.append(ys_m[1])
+                ks.append(ys_m[0])
+                vs.append(ys_m[1])
             new_cache["k"] = jnp.concatenate(ks, axis=0)
             new_cache["v"] = jnp.concatenate(vs, axis=0)
 
@@ -396,7 +397,6 @@ def forward(params: Dict, cfg: ModelConfig, *,
 
     elif cfg.family == "hybrid":
         period = cfg.hybrid.period
-        groups = cfg.num_layers // period
         shared_p = params["shared"]
         shared_lora = lp.get("shared")
 
@@ -460,12 +460,6 @@ def _forward_audio(params, cfg, *, tokens, frames, mode, cache, lp, ctx, aux):
     x = embed_tokens(params["embed"], tokens)
     B, S, _ = x.shape
     positions = index + jnp.arange(S, dtype=jnp.int32)
-
-    # precompute / reuse cross-attn KV
-    if mode == "decode":
-        cross_kv = (cache["cross_k"], cache["cross_v"])  # (L, B, Se, Kv, hd)
-    else:
-        cross_kv = None
 
     def dec_fn(x, xs):
         p_l, kv_l, xkv_l, lora_l = xs

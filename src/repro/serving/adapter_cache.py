@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Dict, Iterable, Optional, Set
+from typing import Dict, Iterable, Set
 
 
 @dataclasses.dataclass
@@ -78,8 +78,21 @@ class AdapterCache:
         overlaps compute — the caller stalls only until the returned time."""
         if aid in self._resident:
             self._resident.move_to_end(aid)
-            # promoted prefetch: usable once its background transfer lands
+            # promoted prefetch: usable once its background transfer lands —
+            # unless a fresh demand transfer would land sooner (the prefetch
+            # sits behind other background loads), in which case the demand
+            # path re-issues it on the copy engine: a promotion never waits
+            # longer than a cold demand load would have
             ready = self._inflight_prefetch.pop(aid, now)
+            if ready > now:
+                nbytes = self._resident[aid]
+                cold = (max(now, self.copy_engine_free_at)
+                        + self.cfg.dma.latency + nbytes / self.cfg.dma.bandwidth)
+                if cold < ready:
+                    self.copy_engine_free_at = cold
+                    self.n_swaps += 1
+                    self.bytes_swapped += nbytes
+                    ready = cold
             return max(now, ready)
         # evict LRU until it fits
         while self._used + self._pinned_bytes + nbytes > self.capacity \

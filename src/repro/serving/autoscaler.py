@@ -1,0 +1,166 @@
+"""SLO-driven decode-tier autoscaling for elastic fleets.
+
+The ROADMAP's autoscaling item: `Fleet` exposes per-replica load and latency
+percentiles; this module closes the loop.  An :class:`Autoscaler` watches
+windowed TTFT/TPOT percentiles against a :class:`SLOConfig` and decides to
+add or retire decode replicas; :func:`run_autoscaled` drives a fleet through
+the request stream in decision windows, applying those decisions and
+re-homing JD clusters on every membership change (``Fleet.rehome``).
+
+The policy is deliberately simple and deterministic (simulations must be
+reproducible): threshold + hysteresis + cooldown, the shape production
+autoscalers (KEDA/HPA-style) reduce to once jitter is removed.
+
+  - scale UP when the window's p95 TTFT (or p95 TPOT) exceeds its SLO, or
+    when the window starved (backlog but no finishes — the fleet is so far
+    behind that latency samples stopped arriving);
+  - scale DOWN when p95 TTFT sits below ``down_fraction`` of the SLO and
+    the backlog is small — hysteresis so the fleet doesn't flap;
+  - at most ``max_step`` replicas change per decision, with
+    ``cooldown_intervals`` quiet windows after any change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence
+
+import numpy as np
+
+from .request import Request
+from .router import Fleet, FleetStats
+from .engine import ServingEngine
+
+
+@dataclasses.dataclass
+class SLOConfig:
+    """Latency objectives, evaluated at p95 over each decision window."""
+    ttft_p95: float = 0.25           # seconds arrival -> first token
+    tpot_p95: float = float("inf")   # seconds/token after the first
+
+    def violated(self, ttft_p95: float, tpot_p95: float) -> bool:
+        return ttft_p95 > self.ttft_p95 or tpot_p95 > self.tpot_p95
+
+
+@dataclasses.dataclass
+class AutoscalerConfig:
+    min_replicas: int = 1
+    max_replicas: int = 8
+    decision_interval: float = 0.25  # simulated seconds per window
+    down_fraction: float = 0.4       # scale down only below this SLO fraction
+    backlog_per_replica: float = 4.0  # "small backlog" bound for scale-down
+    cooldown_intervals: int = 2      # quiet windows after a change
+    max_step: int = 1                # replicas changed per decision
+
+
+@dataclasses.dataclass
+class ScaleDecision:
+    t: float
+    n_active: int
+    ttft_p95: float
+    tpot_p95: float
+    backlog: int
+    delta: int
+
+
+class Autoscaler:
+    """Threshold/hysteresis policy over windowed latency percentiles."""
+
+    def __init__(self, cfg: AutoscalerConfig, slo: SLOConfig):
+        self.cfg = cfg
+        self.slo = slo
+        self.history: List[ScaleDecision] = []
+        self._cooldown = 0
+
+    def decide(self, now: float, ttfts: Sequence[float],
+               tpots: Sequence[float], n_active: int, backlog: int) -> int:
+        """Replica-count delta for this window (>0 add, <0 retire)."""
+        ttft_p95 = float(np.percentile(ttfts, 95)) if len(ttfts) else 0.0
+        tpot_p95 = float(np.percentile(tpots, 95)) if len(tpots) else 0.0
+        starved = not ttfts and backlog > 0
+        delta = 0
+        if self._cooldown > 0:
+            self._cooldown -= 1
+        elif (starved or self.slo.violated(ttft_p95, tpot_p95)) \
+                and n_active < self.cfg.max_replicas:
+            delta = min(self.cfg.max_step, self.cfg.max_replicas - n_active)
+        elif (ttfts and not self.slo.violated(ttft_p95, tpot_p95)
+              and ttft_p95 < self.cfg.down_fraction * self.slo.ttft_p95
+              and backlog <= self.cfg.backlog_per_replica * n_active
+              and n_active > self.cfg.min_replicas):
+            delta = -min(self.cfg.max_step, n_active - self.cfg.min_replicas)
+        if delta:
+            self._cooldown = self.cfg.cooldown_intervals
+        self.history.append(ScaleDecision(
+            t=now, n_active=n_active, ttft_p95=ttft_p95, tpot_p95=tpot_p95,
+            backlog=backlog, delta=delta))
+        return delta
+
+
+def run_autoscaled(fleet: Fleet, requests: Sequence[Request],
+                   autoscaler: Autoscaler,
+                   engine_factory: Callable[[], ServingEngine],
+                   max_steps: int = 10_000_000) -> FleetStats:
+    """Drive `fleet` through `requests` in decision windows.
+
+    Per window: route the window's arrivals (prefill-tier-first when the
+    fleet is disaggregated), advance every replica to the window end,
+    observe TTFT/TPOT of requests that finished inside the window, then
+    apply the autoscaler's decision — ``engine_factory()`` builds a decode
+    replica that joins at the window boundary; scale-down retires the most
+    recently added active replica (drains, no new work).  Membership
+    changes re-home JD clusters.  After the last arrival the fleet runs to
+    completion and merged stats are returned.
+    """
+    reqs = sorted(requests, key=lambda r: r.arrival_time)
+    finished: List[Request] = []
+
+    def on_finish(r: Request) -> None:
+        finished.append(r)
+
+    for eng in fleet.engines:
+        eng.on_finish = on_finish
+
+    dt = autoscaler.cfg.decision_interval
+    t = dt
+    i = 0
+    while True:
+        j = i
+        while j < len(reqs) and reqs[j].arrival_time < t:
+            j += 1
+        if j > i:
+            fleet.submit(reqs[i:j])
+            i = j
+        fleet.advance_to(t)
+        ttfts = [r.ttft for r in finished if r.ttft is not None]
+        tpots = [r.tpot for r in finished if r.tpot is not None]
+        finished.clear()
+        outstanding = sum(len(eng.running) + len(eng.waiting)
+                          for eng in fleet.engines)
+        if i >= len(reqs) and outstanding == 0:
+            break
+        # decisions see only decode-actionable work: requests whose KV is
+        # still in prefill/transfer (ready_time > t) cannot be helped by
+        # another decode replica, and counting them would drive useless
+        # scale-up against a prefill-tier bottleneck
+        if i >= len(reqs):
+            # drain phase: routing is over, so a new replica could never
+            # receive work — taking further decisions would only inflate
+            # scale_events / n_replicas_final with idle replicas
+            t += dt
+            continue
+        backlog = sum(
+            len(eng.running)
+            + sum(1 for r in eng.waiting if r.ready_time <= t)
+            for eng in fleet.engines)
+        active = fleet._active_idxs()
+        delta = autoscaler.decide(t, ttfts, tpots, len(active), backlog)
+        if delta > 0:
+            for _ in range(delta):
+                eng = engine_factory()
+                eng.on_finish = on_finish
+                fleet.add_replica(eng, now=t)
+        elif delta < 0:
+            for _ in range(-delta):
+                fleet.retire_replica(fleet._active_idxs()[-1])
+        t += dt
+    return fleet.run(max_steps)

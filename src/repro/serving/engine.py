@@ -16,10 +16,8 @@ Serving modes:
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional, Sequence
 
-import numpy as np
 
 from .adapter_cache import AdapterCache, CacheConfig
 from .request import Request, ServeStats
@@ -51,13 +49,12 @@ class ModelFootprint:
     jd_shared_bytes_per_cluster: int  # U_j+V_j across modules
     jd_sigma_bytes_per_adapter: int
     n_clusters: int = 1
+    kv_bytes_per_token: int = 0      # bf16 K+V across layers (disagg handoff)
 
     @staticmethod
     def from_config(cfg, rank: int = 16, jd_rank: int = 16,
-                    n_clusters: int = 1, diag: bool = False,
-                    n_modules: Optional[int] = None) -> "ModelFootprint":
+                    n_clusters: int = 1, diag: bool = False) -> "ModelFootprint":
         d = cfg.d_model
-        nm = n_modules if n_modules is not None else 3 * cfg.num_layers
         hd = cfg.resolved_head_dim
         dims = {"q": (d, cfg.num_heads * hd), "k": (d, cfg.num_kv_heads * hd),
                 "v": (d, cfg.num_kv_heads * hd)}
@@ -70,7 +67,8 @@ class ModelFootprint:
             lora_bytes_per_adapter=2 * per_module_lora * cfg.num_layers,
             jd_shared_bytes_per_cluster=2 * per_module_shared * cfg.num_layers,
             jd_sigma_bytes_per_adapter=2 * sig * cfg.num_layers,
-            n_clusters=n_clusters)
+            n_clusters=n_clusters,
+            kv_bytes_per_token=2 * 2 * cfg.num_layers * cfg.num_kv_heads * hd)
 
 
 class CostModelExecutor:
@@ -111,6 +109,10 @@ class CostModelExecutor:
         fl = 2.0 * self.fp.n_active_params * req.prompt_len
         return fl / (self.hw.peak_flops * self.hw.mfu_prefill)
 
+    def kv_bytes(self, req: Request) -> int:
+        """KV-cache bytes produced by prefill (shipped on disagg handoff)."""
+        return self.fp.kv_bytes_per_token * req.prompt_len
+
 
 # ---------------------------------------------------------------------------
 # engine
@@ -145,24 +147,28 @@ class ServingEngine:
 
     def submit(self, reqs: Sequence[Request]) -> None:
         self.waiting.extend(reqs)
-        self.waiting.sort(key=lambda r: r.arrival_time)
+        self.waiting.sort(key=lambda r: r.ready_time)
 
     def _admit(self) -> None:
         admitted = self.scheduler.admit(self.running, self.waiting,
                                         self.cache.resident_ids, self.clock)
         for r in admitted:
             self.waiting.remove(r)
-            r.start_time = self.clock
-            # adapter must be resident before prefill
-            t_ready = self.cache.ensure(r.adapter_id,
-                                        self.executor.adapter_bytes(r.adapter_id),
-                                        self.clock)
-            stall = max(0.0, t_ready - self.clock)
-            t_pre = self.executor.prefill_time(r)
-            self.clock += stall + t_pre
-            self.stats.swap_time += stall
-            self.stats.compute_time += t_pre
-            r.prefilled = True
+            if r.start_time is None:     # disagg requests keep prefill start
+                r.start_time = self.clock
+            if not r.prefilled:
+                # colocated serving: prefill runs inline at admission.
+                # adapter must be resident before prefill
+                t_ready = self.cache.ensure(
+                    r.adapter_id,
+                    self.executor.adapter_bytes(r.adapter_id),
+                    self.clock)
+                stall = max(0.0, t_ready - self.clock)
+                t_pre = self.executor.prefill_time(r)
+                self.clock += stall + t_pre
+                self.stats.swap_time += stall
+                self.stats.compute_time += t_pre
+                r.prefilled = True
             self.running.append(r)
 
     def _prefetch_waiting(self) -> None:
@@ -172,7 +178,7 @@ class ServingEngine:
         if not self.cfg.prefetch:
             return
         for r in self.waiting[:self.cfg.prefetch_depth]:
-            if r.arrival_time > self.clock:     # not yet known to the engine
+            if r.ready_time > self.clock:       # not yet known to the engine
                 break
             self.cache.prefetch(r.adapter_id,
                                 self.executor.adapter_bytes(r.adapter_id),
@@ -183,8 +189,8 @@ class ServingEngine:
         if not self.running and not self.waiting:
             return False
         if not self.running and self.waiting:
-            # jump to next arrival
-            self.clock = max(self.clock, self.waiting[0].arrival_time)
+            # jump to next arrival (KV-ready time for disaggregated requests)
+            self.clock = max(self.clock, self.waiting[0].ready_time)
         self._admit()
         if not self.running:
             return True

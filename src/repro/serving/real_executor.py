@@ -8,9 +8,8 @@ adapter ids (mode "lora": stacked A/B banks; mode "jd": U/V/Sigma bundles).
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -21,6 +21,21 @@ class Request:
     finish_time: Optional[float] = None
     prefilled: bool = False
     replica: Optional[int] = None    # set by fleet routing
+    # disaggregated serving: set by the prefill tier when prefill runs on a
+    # separate replica and the KV cache is shipped to decode over a link
+    prefill_replica: Optional[int] = None
+    prefill_done_time: Optional[float] = None
+    transfer_time: float = 0.0       # KV handoff cost (prefill -> decode)
+    decode_ready_time: Optional[float] = None
+
+    @property
+    def ready_time(self) -> float:
+        """Earliest time a decode engine may admit this request: the arrival
+        for colocated serving, the KV-transfer completion when prefill ran on
+        a disaggregated prefill tier."""
+        if self.decode_ready_time is not None:
+            return self.decode_ready_time
+        return self.arrival_time
 
     @property
     def done(self) -> bool:

@@ -21,6 +21,20 @@ each replica gets (S-LoRA §6; arXiv:2511.22880).  Policies:
                          hot-spotting the fleet under Zipf skew.
 
 All policies are deterministic given the request stream.
+
+Two orthogonal production extensions on top of the policies:
+
+  * **Disaggregated prefill** — pass a
+    :class:`~repro.serving.prefill.PrefillTier`: requests are routed
+    prefill-tier-first (the tier stamps ``decode_ready_time`` via its
+    :class:`~repro.serving.prefill.TransferLink`), then placed on decode
+    replicas with the configured policy; decode engines admit a request
+    only once its KV has landed.
+  * **Elastic membership** — :meth:`add_replica` / :meth:`retire_replica`
+    let an autoscaler grow/shrink the decode tier mid-stream.  Retired
+    replicas drain their queue but receive no new work; membership changes
+    re-home JD clusters (sticky affinity maps are rebuilt against the new
+    active set on next sighting).
 """
 from __future__ import annotations
 
@@ -28,6 +42,7 @@ import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence
 
 from .engine import CostModelExecutor, ServingEngine
+from .prefill import PrefillTier
 from .request import Request, ServeStats
 
 POLICIES = ("round_robin", "least_outstanding", "adapter_affinity",
@@ -41,18 +56,31 @@ class FleetConfig:
     # affinity policies: allowed routed-work imbalance (home vs lightest
     # replica) before a request spills, in units of average request work
     spill_requests: float = 1.0
+    # disaggregated serving: route requests through a prefill tier before
+    # decode placement (the tier itself is passed to Fleet — it owns
+    # executors/caches that FleetConfig cannot describe)
+    disaggregated: bool = False
 
 
 @dataclasses.dataclass
 class FleetStats:
     total: ServeStats
     per_replica: List[ServeStats]
+    prefill: Optional[Dict] = None       # PrefillStats.to_dict() if disagg
+    n_replicas_final: Optional[int] = None   # active replicas at drain time
+    scale_events: int = 0                # autoscaler membership changes
+    autoscaler: Optional[List] = None    # ScaleDecision history if autoscaled
 
     def to_dict(self) -> Dict:
         d = self.total.to_dict()
         d["n_replicas"] = len(self.per_replica)
         d["per_replica_rps"] = [s.throughput_rps for s in self.per_replica]
         d["per_replica_n_requests"] = [s.n_requests for s in self.per_replica]
+        if self.prefill is not None:
+            d.update(self.prefill)
+        if self.n_replicas_final is not None:
+            d["n_replicas_final"] = self.n_replicas_final
+            d["scale_events"] = self.scale_events
         return d
 
 
@@ -64,20 +92,58 @@ class Fleet:
     """
 
     def __init__(self, cfg: FleetConfig, engines: Sequence[ServingEngine],
-                 cluster_of: Optional[Dict[int, int]] = None):
+                 cluster_of: Optional[Dict[int, int]] = None,
+                 prefill_tier: Optional[PrefillTier] = None):
         if len(engines) != cfg.n_replicas:
             raise ValueError(f"expected {cfg.n_replicas} engines, "
                              f"got {len(engines)}")
         if cfg.policy not in POLICIES:
             raise ValueError(f"unknown policy {cfg.policy!r}; "
                              f"one of {POLICIES}")
+        if cfg.disaggregated != (prefill_tier is not None):
+            raise ValueError("disaggregated fleets need a prefill_tier and "
+                             "colocated fleets must not pass one: got "
+                             f"disaggregated={cfg.disaggregated}, "
+                             f"prefill_tier={prefill_tier!r}")
         self.cfg = cfg
         self.engines = list(engines)
         self.cluster_of = cluster_of or {}
+        self.prefill_tier = prefill_tier
+        self.active: List[bool] = [True] * len(engines)
         self._rr = 0
         self._home: Dict[int, int] = {}          # affinity key -> replica
         self._routed_load: List[float] = [0.0] * len(engines)  # est. seconds
         self.assignments: Dict[int, int] = {}    # rid -> replica
+        self.scale_events = 0
+
+    # -- elastic membership -------------------------------------------------
+    def _active_idxs(self) -> List[int]:
+        return [i for i, a in enumerate(self.active) if a]
+
+    def add_replica(self, engine: ServingEngine, now: float = 0.0) -> int:
+        """Join a fresh decode replica at simulated time `now`."""
+        engine.clock = max(engine.clock, now)
+        self.engines.append(engine)
+        self.active.append(True)
+        self._routed_load.append(0.0)
+        self.scale_events += 1
+        self.rehome()
+        return len(self.engines) - 1
+
+    def retire_replica(self, i: int) -> None:
+        """Stop routing to replica `i`; it drains its remaining queue."""
+        if not self.active[i]:
+            return
+        if len(self._active_idxs()) == 1:
+            raise ValueError("cannot retire the last active replica")
+        self.active[i] = False
+        self.scale_events += 1
+        self.rehome()
+
+    def rehome(self) -> None:
+        """Drop sticky affinity placements: on the next sighting each
+        adapter/JD-cluster is re-placed against the current active set."""
+        self._home.clear()
 
     # -- live state helpers -------------------------------------------------
     def _advance_to(self, t: float) -> None:
@@ -85,27 +151,32 @@ class Fleet:
         queue-depth observations at an arrival are causal."""
         for eng in self.engines:
             while (eng.running or
-                   (eng.waiting and eng.waiting[0].arrival_time <= t)) \
+                   (eng.waiting and eng.waiting[0].ready_time <= t)) \
                     and eng.clock < t:
                 if not eng.step():
                     break
+
+    def advance_to(self, t: float) -> None:
+        """Public window driver for elastic serving (see autoscaler)."""
+        self._advance_to(t)
 
     def _outstanding(self, i: int) -> int:
         eng = self.engines[i]
         return len(eng.running) + len(eng.waiting)
 
     def _least_outstanding(self, among: Optional[Sequence[int]] = None) -> int:
-        idxs = range(len(self.engines)) if among is None else among
+        idxs = self._active_idxs() if among is None else among
         return min(idxs, key=lambda i: (self._outstanding(i), i))
 
     # -- policies -----------------------------------------------------------
     def _route_round_robin(self, req: Request) -> int:
-        i = self._rr % len(self.engines)
+        idxs = self._active_idxs()
+        i = idxs[self._rr % len(idxs)]
         self._rr += 1
         return i
 
     def _route_least_outstanding(self, req: Request) -> int:
-        self._advance_to(req.arrival_time)
+        self._advance_to(req.ready_time)
         return self._least_outstanding()
 
     def _affinity_key(self, req: Request) -> int:
@@ -116,10 +187,11 @@ class Fleet:
     def _route_affinity(self, req: Request) -> int:
         key = self._affinity_key(req)
         home = self._home.get(key)
-        lightest = min(range(len(self.engines)),
-                       key=lambda i: (self._routed_load[i], i))
-        if home is None:
-            # first sighting: place on the least-loaded replica so far
+        idxs = self._active_idxs()
+        lightest = min(idxs, key=lambda i: (self._routed_load[i], i))
+        if home is None or not self.active[home]:
+            # first sighting (or home retired): place on the least-loaded
+            # active replica
             self._home[key] = lightest
             return lightest
         # bounded spill: sticky only while the home replica's routed work
@@ -143,7 +215,8 @@ class Fleet:
         if isinstance(ex, CostModelExecutor):
             bs = self.engines[0].cfg.scheduler.max_batch
             step = ex.decode_step_time([req] * bs)
-            return ex.prefill_time(req) + req.max_new_tokens * step / bs
+            pre = 0.0 if req.prefilled else ex.prefill_time(req)
+            return pre + req.max_new_tokens * step / bs
         return float(req.prompt_len + req.max_new_tokens)
 
     def _router(self) -> Callable[[Request], int]:
@@ -156,17 +229,34 @@ class Fleet:
 
     # -- public API ---------------------------------------------------------
     def submit(self, requests: Sequence[Request]) -> None:
+        """Route `requests` to decode replicas (prefill-tier-first when
+        disaggregated).  May be called repeatedly with successive arrival
+        windows; routing state persists across calls."""
+        if self.prefill_tier is not None:
+            # prefill tier runs first and stamps decode_ready_time; decode
+            # placement happens in KV-arrival order
+            self.prefill_tier.process(requests)
         route = self._router()
-        for r in sorted(requests, key=lambda r: r.arrival_time):
+        # routed-load accounting feeds the affinity policies' spill logic
+        # only; skip the per-request cost probe for the stateless policies
+        track_load = self.cfg.policy in ("adapter_affinity",
+                                         "cluster_affinity")
+        for r in sorted(requests, key=lambda r: r.ready_time):
             i = route(r)
             r.replica = i
             self.assignments[r.rid] = i
-            self._routed_load[i] += self._work_estimate(r)
+            if track_load:
+                self._routed_load[i] += self._work_estimate(r)
             self.engines[i].submit([r])
 
     def run(self, max_steps: int = 10_000_000) -> FleetStats:
         per = [eng.run(max_steps) for eng in self.engines]
-        return FleetStats(total=ServeStats.merged(per), per_replica=per)
+        return FleetStats(
+            total=ServeStats.merged(per), per_replica=per,
+            prefill=(self.prefill_tier.stats.to_dict()
+                     if self.prefill_tier is not None else None),
+            n_replicas_final=len(self._active_idxs()),
+            scale_events=self.scale_events)
 
     def replicas_of_adapter(self, requests: Sequence[Request]) -> Dict[int, set]:
         """adapter_id -> set of replicas its requests were routed to."""

@@ -45,11 +45,12 @@ class Scheduler:
             same_cluster = (self.cfg.cluster_aware and
                             self.cluster_of.get(req.adapter_id)
                             in active_clusters)
-            # lower = better; FIFO tiebreak by arrival
+            # lower = better; FIFO tiebreak by decode-readiness (equals the
+            # arrival time for colocated serving)
             return (not same_adapter, not resident_hit, not same_cluster,
-                    req.arrival_time)
+                    req.ready_time)
 
-        ready = [r for r in waiting if r.arrival_time <= now]
+        ready = [r for r in waiting if r.ready_time <= now]
         ready.sort(key=score)
         admitted: List[Request] = []
         adapters = set(active_adapters)

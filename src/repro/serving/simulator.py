@@ -21,11 +21,14 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.serving.autoscaler import (Autoscaler, AutoscalerConfig, SLOConfig,
+                                      run_autoscaled)
 from repro.serving.engine import (CostModelExecutor, EngineConfig,
                                   ModelFootprint, ServingEngine,
                                   ServingHardware)
+from repro.serving.prefill import PrefillConfig, PrefillTier, PrefillWorker
 from repro.serving.request import Request
-from repro.serving.router import Fleet, FleetConfig
+from repro.serving.router import Fleet, FleetConfig, FleetStats
 from repro.serving.scheduler import SchedulerConfig
 from repro.serving.workload import WorkloadSpec, make_workload
 
@@ -72,29 +75,103 @@ def memory_matched_setup(model_cfg, n_adapters: int,
     return setting, cluster_of, budget
 
 
+def serving_footprint(model_cfg, mode: str, n_adapters: int,
+                      setting: Dict) -> ModelFootprint:
+    """The cost-model footprint build_fleet has always used for `mode`."""
+    if mode == "jd":
+        return ModelFootprint.from_config(model_cfg, jd_rank=setting["rank"],
+                                          n_clusters=setting["clusters"])
+    fp = ModelFootprint.from_config(model_cfg)
+    if n_adapters <= 1:                # merged single-LoRA reference
+        fp = dataclasses.replace(fp, lora_bytes_per_adapter=0)
+    return fp
+
+
+def build_engine(model_cfg, mode: str, n_adapters: int, budget: float,
+                 hw: ServingHardware, cluster_of: Dict[int, int],
+                 setting: Dict, max_batch: int = 32,
+                 prefetch: bool = False) -> ServingEngine:
+    """One cost-model decode replica (also the autoscaler's engine factory)."""
+    fp = serving_footprint(model_cfg, mode, n_adapters, setting)
+    ex = CostModelExecutor(hw, fp, mode, cluster_of)
+    return ServingEngine(
+        EngineConfig(scheduler=SchedulerConfig(max_batch=max_batch),
+                     adapter_budget_bytes=budget, mode=mode,
+                     prefetch=prefetch),
+        ex, cluster_of)
+
+
+def build_prefill_tier(model_cfg, mode: str, n_adapters: int, budget: float,
+                       prefill_cfg: PrefillConfig, hw: ServingHardware,
+                       cluster_of: Dict[int, int],
+                       setting: Dict) -> PrefillTier:
+    """Prefill workers with the same footprint/cost model and per-worker
+    adapter budget as the decode tier (adapters must be resident on the
+    prefill device too)."""
+    fp = serving_footprint(model_cfg, mode, n_adapters, setting)
+    cfg = dataclasses.replace(prefill_cfg, mode=mode,
+                              adapter_budget_bytes=budget)
+    workers = [PrefillWorker(cfg, CostModelExecutor(hw, fp, mode, cluster_of),
+                             cluster_of)
+               for _ in range(cfg.n_workers)]
+    return PrefillTier(cfg, workers)
+
+
 def build_fleet(model_cfg, mode: str, n_adapters: int, budget: float,
                 fleet_cfg: FleetConfig, hw: ServingHardware,
                 cluster_of: Dict[int, int], setting: Dict,
-                max_batch: int = 32, prefetch: bool = False) -> Fleet:
+                max_batch: int = 32, prefetch: bool = False,
+                prefill_cfg: Optional[PrefillConfig] = None) -> Fleet:
     """N identical replicas of the cost-model engine for `mode`.
 
-    Budget is per replica (each replica owns an HBM adapter region)."""
-    if mode == "jd":
-        fp = ModelFootprint.from_config(model_cfg, jd_rank=setting["rank"],
-                                        n_clusters=setting["clusters"])
-    else:
-        fp = ModelFootprint.from_config(model_cfg)
-        if n_adapters <= 1:            # merged single-LoRA reference
-            fp = dataclasses.replace(fp, lora_bytes_per_adapter=0)
-    engines = []
-    for _ in range(fleet_cfg.n_replicas):
-        ex = CostModelExecutor(hw, fp, mode, cluster_of)
-        engines.append(ServingEngine(
-            EngineConfig(scheduler=SchedulerConfig(max_batch=max_batch),
-                         adapter_budget_bytes=budget, mode=mode,
-                         prefetch=prefetch),
-            ex, cluster_of))
-    return Fleet(fleet_cfg, engines, cluster_of)
+    Budget is per replica (each replica owns an HBM adapter region).  With
+    `prefill_cfg` the fleet is disaggregated: a prefill tier (own workers,
+    caches, and KV transfer link) feeds the decode replicas."""
+    engines = [build_engine(model_cfg, mode, n_adapters, budget, hw,
+                            cluster_of, setting, max_batch, prefetch)
+               for _ in range(fleet_cfg.n_replicas)]
+    tier = None
+    if prefill_cfg is not None:
+        fleet_cfg = dataclasses.replace(fleet_cfg, disaggregated=True)
+        tier = build_prefill_tier(model_cfg, mode, n_adapters, budget,
+                                  prefill_cfg, hw, cluster_of, setting)
+    return Fleet(fleet_cfg, engines, cluster_of, prefill_tier=tier)
+
+
+def run_elastic_study(model_cfg, mode: str, n_adapters: int,
+                      requests: List[Request],
+                      fleet_cfg: FleetConfig,
+                      hw: Optional[ServingHardware] = None,
+                      max_batch: int = 32,
+                      cluster_assign_seed: int = 0,
+                      prefill_cfg: Optional[PrefillConfig] = None,
+                      autoscaler_cfg: Optional[AutoscalerConfig] = None,
+                      slo: Optional[SLOConfig] = None) -> FleetStats:
+    """One serving cell, optionally disaggregated and/or autoscaled.
+
+    With `autoscaler_cfg` the fleet starts at ``fleet_cfg.n_replicas``
+    decode replicas and elastically scales between the autoscaler's
+    min/max against `slo`; otherwise the replica set is fixed.  Returns
+    merged :class:`FleetStats` (``stats.autoscaler`` holds the decision
+    history when autoscaled)."""
+    hw = hw or ServingHardware()
+    setting, cluster_of, budget = memory_matched_setup(
+        model_cfg, n_adapters, cluster_assign_seed)
+    fleet = build_fleet(model_cfg, mode, n_adapters, budget, fleet_cfg, hw,
+                        cluster_of, setting, max_batch,
+                        prefill_cfg=prefill_cfg)
+    if autoscaler_cfg is None:
+        fleet.submit(requests)
+        return fleet.run()
+    scaler = Autoscaler(autoscaler_cfg, slo or SLOConfig())
+
+    def factory() -> ServingEngine:
+        return build_engine(model_cfg, mode, n_adapters, budget, hw,
+                            cluster_of, setting, max_batch)
+
+    stats = run_autoscaled(fleet, requests, scaler, factory)
+    stats.autoscaler = scaler.history
+    return stats
 
 
 def run_throughput_study(model_cfg, n_adapters_list: List[int],

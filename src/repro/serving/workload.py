@@ -13,7 +13,8 @@ from __future__ import annotations
 
 import csv
 import dataclasses
-from typing import List, Optional, Sequence
+import warnings
+from typing import List, Sequence
 
 import numpy as np
 
@@ -109,7 +110,13 @@ TRACE_COLUMNS = ("arrival_time", "adapter_id", "prompt_len", "max_new_tokens")
 
 def load_trace(path: str) -> List[Request]:
     """Replay a CSV trace with columns arrival_time,adapter_id,prompt_len,
-    max_new_tokens (header required; extra columns ignored)."""
+    max_new_tokens (header required; extra columns ignored).
+
+    Real traces are frequently written by concurrent frontends and arrive
+    with out-of-order timestamps; replaying them unsorted would produce
+    negative inter-arrival gaps (and non-causal queue dynamics), so the
+    loader sorts by arrival time — warning when it had to — and renumbers
+    ``rid`` to the replay order."""
     out: List[Request] = []
     with open(path, newline="") as f:
         reader = csv.DictReader(f)
@@ -122,7 +129,12 @@ def load_trace(path: str) -> List[Request]:
                 prompt_len=int(row["prompt_len"]),
                 max_new_tokens=int(row["max_new_tokens"]),
                 arrival_time=float(row["arrival_time"])))
-    out.sort(key=lambda r: r.arrival_time)
+    if any(a.arrival_time > b.arrival_time for a, b in zip(out, out[1:])):
+        warnings.warn(f"trace {path} has out-of-order timestamps; "
+                      "sorting by arrival_time for replay", stacklevel=2)
+        out.sort(key=lambda r: r.arrival_time)
+        for i, r in enumerate(out):
+            r.rid = i
     return out
 
 

@@ -8,7 +8,7 @@ separate partitioner.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -40,8 +40,12 @@ def lr_at(cfg: AdamWConfig, step: Array) -> Array:
 
 
 def init_opt_state(params) -> Dict[str, Any]:
-    f32 = lambda p: p.astype(jnp.float32)
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def f32(p):
+        return p.astype(jnp.float32)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
     return {
         "master": jax.tree.map(f32, params),
         "mu": jax.tree.map(zeros, params),
@@ -51,7 +55,9 @@ def init_opt_state(params) -> Dict[str, Any]:
 
 
 def abstract_opt_state(params_struct) -> Dict[str, Any]:
-    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    def f32(p):
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+
     return {
         "master": jax.tree.map(f32, params_struct),
         "mu": jax.tree.map(f32, params_struct),

@@ -2,8 +2,7 @@
 microbatched gradient accumulation (scan) for the 100B+ cells."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

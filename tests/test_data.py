@@ -33,7 +33,6 @@ def test_loss_mask_only_on_output():
 
 
 def test_tasks_differ():
-    rng = np.random.default_rng(0)
     outs = []
     for t in range(7):
         spec = make_task(t)

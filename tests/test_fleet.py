@@ -1,5 +1,4 @@
 """Fleet routing, workload generation, and latency accounting tests."""
-import dataclasses
 
 import numpy as np
 import pytest
@@ -222,6 +221,32 @@ def test_trace_roundtrip(tmp_path):
                for b, r in zip(back, reqs))
 
 
+def test_trace_out_of_order_timestamps_sorted_with_warning(tmp_path):
+    """Concurrent-frontend traces arrive unsorted; load_trace must warn,
+    sort, and renumber so replay never sees negative inter-arrival gaps."""
+    p = tmp_path / "ooo.csv"
+    p.write_text("arrival_time,adapter_id,prompt_len,max_new_tokens\n"
+                 "2.0,7,16,4\n0.5,3,16,4\n1.0,5,16,4\n")
+    with pytest.warns(UserWarning, match="out-of-order"):
+        reqs = load_trace(str(p))
+    assert [r.arrival_time for r in reqs] == [0.5, 1.0, 2.0]
+    assert [r.adapter_id for r in reqs] == [3, 5, 7]
+    assert [r.rid for r in reqs] == [0, 1, 2]
+    gaps = np.diff([r.arrival_time for r in reqs])
+    assert (gaps >= 0).all()
+
+
+def test_trace_in_order_does_not_warn(tmp_path):
+    import warnings as _w
+    p = tmp_path / "ok.csv"
+    p.write_text("arrival_time,adapter_id,prompt_len,max_new_tokens\n"
+                 "0.5,3,16,4\n1.0,5,16,4\n")
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        reqs = load_trace(str(p))
+    assert [r.rid for r in reqs] == [0, 1]
+
+
 def test_cluster_affinity_beats_round_robin_under_skew():
     """Acceptance: at 256 adapters x 4 replicas under Zipf(1.0) skew and
     saturating load, JD-cluster-affinity routing >= round-robin throughput
@@ -274,6 +299,59 @@ def test_prefetch_never_evicts():
     assert not c.is_resident(2) and c.is_resident(1)
     c.prefetch(3, 20, now=1.0)       # fits in the slack: loaded
     assert c.is_resident(3)
+
+
+def test_demand_miss_after_multiple_prefetches_not_queued_behind_them():
+    """Prefetches serialize among themselves, but a demand miss issued right
+    after any number of prefetches preempts the whole background queue."""
+    dma = DMAModel(bandwidth=100.0, latency=0.0)    # 1 byte = 10 ms
+    c = AdapterCache(CacheConfig(capacity_bytes=1000, dma=dma))
+    c.prefetch(1, 200, now=0.0)                     # background: done at 2.0
+    c.prefetch(2, 100, now=0.0)                     # queued behind 1: 3.0
+    t = c.ensure(3, 100, now=0.0)                   # demand right after
+    assert t == pytest.approx(1.0)                  # not 4.0
+    # first prefetch lands at its background time (a cold re-fetch would be
+    # slower: copy engine busy until 1.0 + 2.0s transfer)
+    assert c.ensure(1, 200, now=0.0) == pytest.approx(2.0)
+    # second prefetch is stuck behind the first (3.0); promotion re-issues
+    # it on the demand path instead: ready at 1.0 + 1.0s — never worse
+    # than a cold demand load
+    assert c.ensure(2, 100, now=0.0) == pytest.approx(2.0)
+    assert c.n_prefetches == 2 and c.n_swaps == 2
+
+
+def test_demand_eviction_prefers_prefetched_over_demand_resident():
+    """Prefetched entries enter the LRU cold end: when a demand load needs
+    space it evicts them before any demand-loaded adapter."""
+    c = AdapterCache(CacheConfig(capacity_bytes=100))
+    c.ensure(1, 50, now=0.0)         # resident demand adapter
+    c.prefetch(2, 40, now=1.0)       # speculative fill
+    c.ensure(3, 40, now=2.0)         # needs 40 bytes: evict the prefetch
+    assert c.is_resident(1) and c.is_resident(3)
+    assert not c.is_resident(2)
+
+
+def test_prefetch_never_evicts_inflight_prefetches_either():
+    """A prefetch that would need to displace anything — demand-resident or
+    previously prefetched — is dropped instead."""
+    c = AdapterCache(CacheConfig(capacity_bytes=100))
+    c.ensure(1, 50, now=0.0)
+    c.prefetch(2, 30, now=1.0)       # fits
+    c.prefetch(3, 30, now=1.0)       # would displace: dropped
+    assert c.is_resident(1) and c.is_resident(2)
+    assert not c.is_resident(3)
+    assert c.n_prefetches == 1
+
+
+def test_prefetch_of_resident_adapter_is_noop():
+    c = AdapterCache(CacheConfig(capacity_bytes=100))
+    c.ensure(1, 50, now=0.0)
+    c.prefetch(1, 50, now=1.0)
+    assert c.n_prefetches == 0 and c.used_bytes == 50
+    # and a resident demand adapter is never double-charged
+    c.prefetch(2, 40, now=1.0)
+    c.prefetch(2, 40, now=1.5)
+    assert c.n_prefetches == 1 and c.used_bytes == 90
 
 
 def test_engine_prefetch_reduces_stall_not_throughput():

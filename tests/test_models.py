@@ -14,7 +14,7 @@ import pytest
 from repro.configs import ASSIGNED, smoke_config, smoke_shape
 from repro.models import api, transformer as tf
 from repro.models.layers import logits_fwd
-from repro.models.param import count_defs, init_params
+from repro.models.param import init_params
 
 
 def _make_batch(cfg, shape, key):

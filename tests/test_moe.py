@@ -1,16 +1,13 @@
 """MoE dispatch/combine correctness + dense-oracle equivalence."""
-import dataclasses
 import subprocess
 import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import smoke_config
-from repro.models.moe import (_combine, _dispatch, _moe_dense, _route,
-                              moe_defs, moe_fwd)
+from repro.models.moe import _combine, _dispatch, _moe_dense, _route, moe_defs
 from repro.models.param import init_params
 
 

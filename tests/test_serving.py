@@ -1,7 +1,5 @@
 """Serving engine invariants + throughput-study sanity."""
-import dataclasses
 
-import numpy as np
 import pytest
 
 from repro.configs import get_config

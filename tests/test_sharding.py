@@ -3,9 +3,6 @@ import os
 import subprocess
 import sys
 
-import jax
-import pytest
-from jax.sharding import PartitionSpec as P
 
 SPEC_SCRIPT = r"""
 import os

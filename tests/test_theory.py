@@ -10,8 +10,7 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st
 
 from repro.core.jd import jd_full, normalize_bank, reconstruction_errors
-from repro.core.theory import (check_theorem1, corollary1_regime,
-                               theorem1_bounds, tilde_r)
+from repro.core.theory import check_theorem1, corollary1_regime, tilde_r
 
 
 def random_bank(seed, n=6, r_l=3, d=24):
@@ -60,7 +59,6 @@ def test_thm1_literal_lower_bound_fails_on_duplicates():
 def test_cor1_orthogonal_unit_norm_regime():
     """Orthogonal unit-norm LoRAs: kept energy in [1, min(r^2, n)]."""
     d, n = 24, 6
-    key = jax.random.PRNGKey(3)
     # construct exactly orthogonal rank-1 deltas via disjoint rows
     As, Bs = [], []
     for i in range(n):
