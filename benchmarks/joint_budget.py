@@ -1,0 +1,163 @@
+"""Joint-budget serving study: budget x skew x fabric bandwidth.
+
+The question PR 2's disaggregated study could not ask: given a FIXED pool
+of N accelerators, how should it be split between prefill workers and
+decode replicas — and can a joint autoscaler that re-splits on the fly beat
+every static split when the workload's prefill:decode mix shifts?
+
+Three axes:
+
+1. **Budget** — total accelerators in the pool; every configuration
+   (static splits and the joint autoscaler) draws from the same pool.
+2. **Skew** — adapter popularity (uniform vs Zipf), as in the fleet study.
+3. **Fabric bandwidth** — the shared KV fabric all prefill workers contend
+   on; at low bandwidth the handoff is transfer-bound and chunked
+   streaming (first chunk unblocks decode) starts to matter.
+
+The driving workload is *phase-shifted*: a prompt-heavy phase (long
+prompts, few generated tokens — the prefill tier is the bottleneck)
+followed by a decode-heavy phase (short prompts, long generations — the
+decode tier is).  No static split is right for both phases, which is
+exactly the regime where joint autoscaling pays.
+
+CSV columns: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import List, Optional
+
+from repro.configs import get_config
+from repro.serving.autoscaler import JointAutoscalerConfig, SLOConfig
+from repro.serving.prefill import PrefillConfig
+from repro.serving.request import Request
+from repro.serving.resources import BudgetConfig, FabricConfig
+from repro.serving.router import FleetConfig
+from repro.serving.simulator import run_elastic_study
+from repro.serving.workload import WorkloadSpec, make_workload
+
+try:
+    from .common import csv_row
+except ImportError:                      # run as a script, not a module
+    from common import csv_row
+
+N_ADAPTERS = 256
+
+
+def phase_shift_workload(alpha: float = 1.0, seed: int = 0,
+                         n_prompt_heavy: int = 600,
+                         n_decode_heavy: int = 900,
+                         prompt_rate: float = 220.0,
+                         decode_rate: float = 320.0) -> List[Request]:
+    """Prompt-heavy phase (512-token prompts, 4 generated tokens) followed
+    by a decode-heavy phase (64-token prompts, 48 generated tokens), both
+    gamma-bursty (CV=4) over the same Zipf-skewed adapter set."""
+    base = WorkloadSpec(
+        n_adapters=N_ADAPTERS,
+        popularity="uniform" if alpha == 0 else "zipf", zipf_alpha=alpha,
+        arrival="gamma", burst_cv=4.0, seed=seed)
+    phase_a = make_workload(dataclasses.replace(
+        base, n_requests=n_prompt_heavy, arrival_rate=prompt_rate,
+        prompt_len_mean=512, prompt_len_std=64, new_tokens=4))
+    phase_b = make_workload(dataclasses.replace(
+        base, n_requests=n_decode_heavy, arrival_rate=decode_rate,
+        prompt_len_mean=64, prompt_len_std=16, new_tokens=48,
+        seed=seed + 1))
+    t0 = phase_a[-1].arrival_time if phase_a else 0.0
+    for r in phase_b:
+        r.rid += len(phase_a)
+        r.arrival_time += t0
+    return phase_a + phase_b
+
+
+def static_split_cell(cfg, requests: List[Request], n_prefill: int,
+                      n_decode: int, mode: str = "jd",
+                      fabric: Optional[FabricConfig] = None):
+    """A fixed prefill:decode split of the budget (no autoscaling)."""
+    return run_elastic_study(
+        cfg, mode, N_ADAPTERS, [dataclasses.replace(r) for r in requests],
+        FleetConfig(n_replicas=n_decode, policy="cluster_affinity"),
+        prefill_cfg=PrefillConfig(n_workers=n_prefill, fabric=fabric))
+
+
+def joint_cell(cfg, requests: List[Request], total_accels: int,
+               slo_ttft: float, mode: str = "jd",
+               n_prefill0: int = 2, n_decode0: int = 2,
+               fabric: Optional[FabricConfig] = None,
+               cooldown: int = 0, interval: float = 0.05):
+    """The jointly autoscaled cell over the same fixed budget."""
+    return run_elastic_study(
+        cfg, mode, N_ADAPTERS, [dataclasses.replace(r) for r in requests],
+        FleetConfig(n_replicas=n_decode0, policy="cluster_affinity"),
+        prefill_cfg=PrefillConfig(n_workers=n_prefill0, fabric=fabric),
+        slo=SLOConfig(ttft_p95=slo_ttft),
+        budget_cfg=BudgetConfig(total_accelerators=total_accels),
+        joint_cfg=JointAutoscalerConfig(
+            decision_interval=interval, cooldown_intervals=cooldown))
+
+
+def main(quick: bool = True, json_path: Optional[str] = None):
+    cfg = get_config("mistral-7b")
+    budgets = [6] if quick else [4, 6, 8]
+    skews = [("zipf1.0", 1.0)] if quick else [("uniform", 0.0),
+                                              ("zipf1.0", 1.0)]
+    fabrics = [("fab50g", None)] if quick else [
+        ("fab50g", None),
+        ("fab2g", FabricConfig(bandwidth=2e9, chunk_bytes=1 << 20)),
+    ]
+    slo = 0.4
+    rows = []
+    metrics = {}
+
+    def record(name, stats, dt):
+        d = stats.to_dict()
+        derived = (f"rps={d['throughput_rps']:.2f};"
+                   f"ttft_p95={d['ttft_p95_s'] * 1e3:.1f}ms;"
+                   f"tpot_p95={d['tpot_p95_s'] * 1e3:.2f}ms;"
+                   f"met_slo={d['ttft_p95_s'] <= slo}")
+        if "n_prefill_final" in d:
+            derived += (f";split={d['n_prefill_final']}"
+                        f":{d['n_replicas_final']};"
+                        f"scale_events={d['scale_events']}")
+        rows.append(csv_row(name, dt, derived))
+        metrics[name] = {"rps": d["throughput_rps"]}
+
+    for skew_name, alpha in skews:
+        reqs = phase_shift_workload(alpha=alpha)
+        if quick:
+            reqs = reqs[:1000]
+        for total in budgets:
+            for fab_name, fabric in fabrics:
+                # static splits of the same budget
+                splits = ([(total // 2, total - total // 2)] if quick
+                          else [(p, total - p) for p in range(1, total)])
+                for n_pf, n_dec in splits:
+                    t0 = time.perf_counter()
+                    stats = static_split_cell(cfg, reqs, n_pf, n_dec,
+                                              fabric=fabric)
+                    record(f"joint_{skew_name}_b{total}_{fab_name}"
+                           f"_static{n_pf}x{n_dec}",
+                           stats, (time.perf_counter() - t0) * 1e6)
+                # the joint autoscaler over the same pool
+                t0 = time.perf_counter()
+                stats = joint_cell(cfg, reqs, total, slo_ttft=slo,
+                                   fabric=fabric)
+                record(f"joint_{skew_name}_b{total}_{fab_name}_auto",
+                       stats, (time.perf_counter() - t0) * 1e6)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep for CI smoke")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write deterministic metrics as JSON")
+    args = ap.parse_args()
+    print("\n".join(main(quick=args.quick, json_path=args.json)))

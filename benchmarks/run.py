@@ -27,5 +27,5 @@ def main() -> None:
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
 
 
-if __name__ == '__main__':
+if __name__ == "__main__":
     main()

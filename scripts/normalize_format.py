@@ -1,0 +1,197 @@
+"""Mechanical ruff-format-style normalization, AST-verified.
+
+CI runs the real ``ruff format --check`` (pinned 0.8.4); this script exists
+because dev containers without network access cannot install ruff.  It
+applies the formatter's *mechanically safe* rules —
+
+  - prefer double quotes for strings (skipped when the content contains a
+    double quote),
+  - strip trailing whitespace and normalize the EOF newline,
+  - exactly two blank lines between top-level definitions,
+
+— and verifies after every transformation that the file's AST is unchanged
+(``ast.dump`` equality), dropping any transformation that is not provably
+behavior-preserving for that file.  Line-wrapping style is left to the real
+formatter.
+
+Usage:  python scripts/normalize_format.py [--check] [paths...]
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import io
+import sys
+import tokenize
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _requote(tok_str: str) -> str:
+    """Convert a single-quoted string token to double quotes when safe."""
+    i = 0
+    while i < len(tok_str) and tok_str[i] not in "\"'":
+        i += 1
+    prefix, body = tok_str[:i], tok_str[i:]
+    if body.startswith('"'):
+        return tok_str
+    if body.startswith("'''"):
+        inner, new_quote = body[3:-3], '"""'
+    elif body.startswith("'"):
+        inner, new_quote = body[1:-1], '"'
+    else:
+        return tok_str
+    if '"' in inner:
+        return tok_str                   # would need escaping: not safe
+    return prefix + new_quote + inner + new_quote
+
+
+def requote(text: str) -> str:
+    """Rewrite every plain STRING token's quotes (f-string parts and
+    anything tokenize splits further are left alone)."""
+    try:
+        toks = list(tokenize.generate_tokens(io.StringIO(text).readline))
+    except (tokenize.TokenError, IndentationError):
+        return text
+    lines = text.splitlines(keepends=True)
+    # apply replacements right-to-left so positions stay valid
+    for tok in reversed(toks):
+        if tok.type != tokenize.STRING or "'" not in tok.string:
+            continue
+        new = _requote(tok.string)
+        if new == tok.string:
+            continue
+        (sr, sc), (er, ec) = tok.start, tok.end
+        if sr != er:                     # multiline string: single splice
+            joined = "".join(lines[sr - 1:er])
+            replaced = joined[:sc] + new + joined[len(joined)
+                                                  - (len(lines[er - 1])
+                                                     - ec):]
+            lines[sr - 1:er] = [replaced]
+        else:
+            ln = lines[sr - 1]
+            lines[sr - 1] = ln[:sc] + new + ln[ec:]
+    return "".join(lines)
+
+
+def strip_trailing_ws(text: str) -> str:
+    lines = [ln.rstrip() for ln in text.splitlines()]
+    while lines and lines[-1] == "":
+        lines.pop()
+    return "\n".join(lines) + "\n"
+
+
+def _toplevel_items(text):
+    """(start_row, end_row, kind) per top-level logical line, via tokenize
+    (so lines inside strings or bracket continuations are never mistaken
+    for definitions).  kind: 'decorator' | 'def' | 'other'."""
+    toks = list(tokenize.generate_tokens(io.StringIO(text).readline))
+    items = []
+    start = kind = None
+    for tok in toks:
+        if tok.type in (tokenize.NL, tokenize.COMMENT, tokenize.INDENT,
+                        tokenize.DEDENT, tokenize.ENDMARKER):
+            continue
+        if tok.type == tokenize.NEWLINE:
+            if start is not None:
+                items.append((start, tok.start[0], kind))
+            start = None
+            continue
+        if start is None:
+            start = tok.start[0]
+            if tok.start[1] != 0:
+                kind = "other"
+            elif tok.type == tokenize.OP and tok.string == "@":
+                kind = "decorator"
+            elif tok.type == tokenize.NAME and tok.string in ("def", "class"):
+                kind = "def"
+            else:
+                kind = "other"
+    return items
+
+
+def blank_lines(text: str) -> str:
+    """Exactly two blank lines before top-level def/class/decorator groups;
+    none between a decorator and what it decorates."""
+    try:
+        items = _toplevel_items(text)
+    except (tokenize.TokenError, IndentationError):
+        return text
+    def_rows = {r for r, _, k in items if k in ("def", "decorator")}
+    attach_rows = set()                  # def rows glued to a decorator above
+    for (_, end, kind), (start2, _, kind2) in zip(items, items[1:]):
+        if kind == "decorator" and kind2 in ("def", "decorator"):
+            attach_rows.add(start2)
+    first_code = min((r for r, _, _ in items), default=None)
+    lines = text.splitlines()
+    out: list[tuple[int, str]] = []      # (original_row, line)
+    for i, ln in enumerate(lines):
+        row = i + 1
+        if row in def_rows and first_code is not None and row > first_code:
+            j = len(out) - 1
+            while j >= 0 and out[j][1] == "":
+                j -= 1
+            prev = out[j][1] if j >= 0 else ""
+            if row in attach_rows:       # decorator group stays attached
+                del out[j + 1:]
+            elif not prev.lstrip().startswith("#"):
+                del out[j + 1:]
+                out.extend([(0, ""), (0, "")])
+        out.append((row, ln))
+    while out and out[-1][1] == "":
+        out.pop()
+    return "\n".join(ln for _, ln in out) + "\n"
+
+
+def process(path: Path, check: bool) -> bool:
+    """Returns True when the file was (or would be) changed."""
+    src = path.read_text()
+    try:
+        want = ast.dump(ast.parse(src))
+    except SyntaxError:
+        return False
+    cur = src
+    for step in (requote, strip_trailing_ws, blank_lines):
+        cand = step(cur)
+        if cand == cur:
+            continue
+        try:
+            ok = ast.dump(ast.parse(cand)) == want
+        except SyntaxError:
+            ok = False
+        if ok:
+            cur = cand
+        else:
+            print(f"note: dropped unsafe {step.__name__} for {path}",
+                  file=sys.stderr)
+    if cur == src:
+        return False
+    if not check:
+        path.write_text(cur)
+    return True
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="report files that would change; do not write")
+    ap.add_argument("paths", nargs="*", default=None)
+    args = ap.parse_args()
+    roots = ([Path(p) for p in args.paths] if args.paths
+             else [REPO / "src", REPO / "tests", REPO / "benchmarks",
+                   REPO / "examples", REPO / "scripts"])
+    changed = 0
+    for root in roots:
+        files = [root] if root.is_file() else sorted(root.rglob("*.py"))
+        for f in files:
+            if process(f, args.check):
+                changed += 1
+                print(("would reformat: " if args.check else "reformatted: ")
+                      + str(f))
+    print(f"{changed} file(s) {'would be ' if args.check else ''}changed")
+    return 1 if (args.check and changed) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,4 +1,4 @@
-"""SLO-driven decode-tier autoscaling for elastic fleets.
+"""SLO-driven autoscaling for elastic fleets: decode-only and joint.
 
 The ROADMAP's autoscaling item: `Fleet` exposes per-replica load and latency
 percentiles; this module closes the loop.  An :class:`Autoscaler` watches
@@ -18,15 +18,26 @@ autoscalers (KEDA/HPA-style) reduce to once jitter is removed.
     the backlog is small — hysteresis so the fleet doesn't flap;
   - at most ``max_step`` replicas change per decision, with
     ``cooldown_intervals`` quiet windows after any change.
+
+:class:`JointAutoscaler` generalizes this to *both* tiers of a
+disaggregated fleet under a fixed
+:class:`~repro.serving.resources.HardwareBudget`: the decode tier is scaled
+from TPOT and the decode-side TTFT component exactly as above, the prefill
+tier from its queue depth and its TTFT contribution (arrival ->
+decode-ready), and when the budget pool is exhausted the policy *trades* —
+it retires a worker/replica from a comfortable tier to fund the pressured
+one.  :func:`run_joint_autoscaled` is the matching window driver.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Sequence
+from typing import Callable, List, Sequence, Tuple
 
 import numpy as np
 
+from .prefill import PrefillWorker
 from .request import Request
+from .resources import HardwareBudget
 from .router import Fleet, FleetStats
 from .engine import ServingEngine
 
@@ -94,6 +105,248 @@ class Autoscaler:
             t=now, n_active=n_active, ttft_p95=ttft_p95, tpot_p95=tpot_p95,
             backlog=backlog, delta=delta))
         return delta
+
+
+# ---------------------------------------------------------------------------
+# joint prefill/decode autoscaling under a fixed hardware budget
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class JointAutoscalerConfig:
+    """Policy knobs for two-tier scaling under a fixed budget.
+
+    ``prefill_share`` splits the TTFT SLO between the tiers: the prefill
+    tier (queueing + prefill compute + first-chunk transfer) is considered
+    pressured when its p95 contribution exceeds ``prefill_share *
+    slo.ttft_p95``; the decode tier when its p95 wait (decode-ready ->
+    first token) exceeds the remaining share, when p95 TPOT violates, or
+    when it starves.  Hysteresis and cooldown mirror the decode-only
+    policy.
+    """
+    min_prefill: int = 1
+    min_decode: int = 1
+    decision_interval: float = 0.25  # simulated seconds per window
+    prefill_share: float = 0.5       # TTFT-SLO fraction budgeted to prefill
+    down_fraction: float = 0.4       # scale down only below this share frac
+    backlog_per_replica: float = 4.0  # per-tier "small backlog" bound
+    cooldown_intervals: int = 2      # quiet windows after any change
+
+
+@dataclasses.dataclass
+class JointScaleDecision:
+    t: float
+    n_prefill: int
+    n_decode: int
+    free_accels: int
+    ttft_p95: float
+    tpot_p95: float
+    prefill_lag_p95: float
+    decode_wait_p95: float
+    prefill_backlog: int
+    decode_backlog: int
+    d_prefill: int
+    d_decode: int
+
+
+class JointAutoscaler:
+    """Trades prefill vs decode capacity under a fixed hardware budget.
+
+    Per window each tier is classified hot / cold / ok from its own SLO
+    share and backlog; a hot tier grows from the free pool when possible,
+    and otherwise *takes* capacity from the other tier if that tier is
+    cold (retire + drain there, add here).  Both-hot spends any free
+    budget on the tier that is proportionally worse.  At most one
+    worker/replica moves per tier per decision.
+    """
+
+    def __init__(self, cfg: JointAutoscalerConfig, slo: SLOConfig,
+                 budget: HardwareBudget):
+        self.cfg = cfg
+        self.slo = slo
+        self.budget = budget
+        self.history: List[JointScaleDecision] = []
+        self._cooldown = 0
+
+    @staticmethod
+    def _p95(xs: Sequence[float]) -> float:
+        return float(np.percentile(xs, 95)) if len(xs) else 0.0
+
+    def _trade_frees_enough(self, donor: str, receiver: str) -> bool:
+        """Retiring one `donor` unit must free enough accelerators for one
+        `receiver` unit (footprints differ per role)."""
+        return (self.budget.available + self.budget.cfg.cost(donor)
+                >= self.budget.cfg.cost(receiver))
+
+    def decide(self, now: float, ttfts: Sequence[float],
+               tpots: Sequence[float], decode_waits: Sequence[float],
+               prefill_lags: Sequence[float], n_prefill: int, n_decode: int,
+               prefill_backlog: int, decode_backlog: int) -> Tuple[int, int]:
+        """(prefill delta, decode delta) for this window, each in -1/0/+1."""
+        cfg = self.cfg
+        ttft_p95 = self._p95(ttfts)
+        tpot_p95 = self._p95(tpots)
+        pre_p95 = self._p95(prefill_lags)
+        dwait_p95 = self._p95(decode_waits)
+
+        pre_slo = cfg.prefill_share * self.slo.ttft_p95
+        dec_slo = (1.0 - cfg.prefill_share) * self.slo.ttft_p95
+        pre_hot = (pre_p95 > pre_slo
+                   or prefill_backlog > cfg.backlog_per_replica * n_prefill)
+        pre_cold = (not pre_hot
+                    and pre_p95 < cfg.down_fraction * pre_slo
+                    and prefill_backlog <= n_prefill)
+        starved = not ttfts and decode_backlog > 0
+        dec_hot = (starved or tpot_p95 > self.slo.tpot_p95
+                   or dwait_p95 > dec_slo
+                   or decode_backlog > cfg.backlog_per_replica * n_decode)
+        dec_cold = (not dec_hot and bool(ttfts)
+                    and dwait_p95 < cfg.down_fraction * dec_slo
+                    and tpot_p95 <= cfg.down_fraction * min(self.slo.tpot_p95,
+                                                            1e12)
+                    and decode_backlog <= n_decode)
+
+        d_pre = d_dec = 0
+        if self._cooldown > 0:
+            self._cooldown -= 1
+        elif pre_hot and dec_hot:
+            # both pressured: spend free budget on the proportionally worse
+            # tier (no trade — robbing a hot tier makes things worse)
+            pre_sev = pre_p95 / max(pre_slo, 1e-12)
+            dec_sev = dwait_p95 / max(dec_slo, 1e-12)
+            if starved or tpot_p95 > self.slo.tpot_p95:
+                dec_sev = max(dec_sev, 2.0 * pre_sev + 1.0)
+            order = (["decode", "prefill"] if dec_sev >= pre_sev
+                     else ["prefill", "decode"])
+            for role in order:
+                if self.budget.can_allocate(role):
+                    if role == "prefill":
+                        d_pre = 1
+                    else:
+                        d_dec = 1
+                    break
+        elif pre_hot:
+            if self.budget.can_allocate("prefill"):
+                d_pre = 1
+            elif (dec_cold and n_decode > cfg.min_decode
+                  and self._trade_frees_enough("decode", "prefill")):
+                d_pre, d_dec = 1, -1             # trade: decode funds prefill
+        elif dec_hot:
+            if self.budget.can_allocate("decode"):
+                d_dec = 1
+            elif (pre_cold and n_prefill > cfg.min_prefill
+                  and self._trade_frees_enough("prefill", "decode")):
+                d_pre, d_dec = -1, 1             # trade: prefill funds decode
+        elif pre_cold and n_prefill > cfg.min_prefill:
+            d_pre = -1                           # release to the pool
+        elif dec_cold and n_decode > cfg.min_decode:
+            d_dec = -1
+        if d_pre or d_dec:
+            self._cooldown = cfg.cooldown_intervals
+        self.history.append(JointScaleDecision(
+            t=now, n_prefill=n_prefill, n_decode=n_decode,
+            free_accels=self.budget.available, ttft_p95=ttft_p95,
+            tpot_p95=tpot_p95, prefill_lag_p95=pre_p95,
+            decode_wait_p95=dwait_p95, prefill_backlog=prefill_backlog,
+            decode_backlog=decode_backlog, d_prefill=d_pre, d_decode=d_dec))
+        return d_pre, d_dec
+
+
+def run_joint_autoscaled(fleet: Fleet, requests: Sequence[Request],
+                         autoscaler: JointAutoscaler,
+                         decode_factory: Callable[[], ServingEngine],
+                         prefill_factory: Callable[[], PrefillWorker],
+                         max_steps: int = 10_000_000) -> FleetStats:
+    """Drive a *disaggregated* fleet through `requests`, scaling both tiers
+    under the autoscaler's :class:`~repro.serving.resources.HardwareBudget`.
+
+    Per window: route the window's arrivals (the prefill tier runs eagerly
+    and stamps decode-readiness), advance every decode replica to the
+    window end, observe the tiers' latency components, then apply the
+    joint decision.  Membership changes are symmetric: retired decode
+    replicas and prefill workers drain what they hold but receive no new
+    work, and their accelerators return to the pool at retire time (the
+    drain tail is the hand-over cost).  JD clusters re-home on decode
+    membership changes.
+    """
+    if fleet.prefill_tier is None:
+        raise ValueError("joint autoscaling needs a disaggregated fleet "
+                         "(prefill_tier)")
+    tier = fleet.prefill_tier
+    budget = autoscaler.budget
+    for _ in range(tier.n_active):
+        budget.allocate("prefill")
+    for _ in fleet._active_idxs():
+        budget.allocate("decode")
+
+    reqs = sorted(requests, key=lambda r: r.arrival_time)
+    finished: List[Request] = []
+    for eng in fleet.engines:
+        eng.on_finish = finished.append
+
+    dt = autoscaler.cfg.decision_interval
+    t = dt
+    i = 0
+    window: List[Request] = []       # this window's arrivals (stamped)
+    recent: List[Request] = []       # arrivals still possibly in prefill
+    while True:
+        j = i
+        while j < len(reqs) and reqs[j].arrival_time < t:
+            j += 1
+        window = reqs[i:j]
+        if j > i:
+            fleet.submit(window)
+            recent.extend(window)
+            i = j
+        fleet.advance_to(t)
+        ttfts = [r.ttft for r in finished if r.ttft is not None]
+        tpots = [r.tpot for r in finished if r.tpot is not None]
+        dwaits = [r.decode_wait for r in finished
+                  if r.decode_wait is not None]
+        finished.clear()
+        outstanding = sum(len(eng.running) + len(eng.waiting)
+                          for eng in fleet.engines)
+        if i >= len(reqs) and outstanding == 0:
+            break
+        if i >= len(reqs):
+            # drain phase: routing is over; further decisions could only
+            # inflate scale_events with idle capacity
+            t += dt
+            continue
+        # the prefill tier simulates eagerly, so "queued at t" is virtual:
+        # arrived but not yet prefill-complete by the window end
+        recent = [r for r in recent
+                  if r.prefill_done_time is None or r.prefill_done_time > t]
+        prefill_backlog = sum(1 for r in recent if r.arrival_time <= t)
+        pre_lags = [r.prefill_lag for r in window
+                    if r.prefill_lag is not None]
+        decode_backlog = sum(
+            len(eng.running)
+            + sum(1 for r in eng.waiting if r.ready_time <= t)
+            for eng in fleet.engines)
+        d_pre, d_dec = autoscaler.decide(
+            t, ttfts, tpots, dwaits, pre_lags, tier.n_active,
+            len(fleet._active_idxs()), prefill_backlog, decode_backlog)
+        if d_dec < 0:
+            fleet.retire_replica(fleet._active_idxs()[-1])
+            budget.release("decode")
+        if d_pre < 0:
+            tier.retire_worker(tier._active_idxs()[-1])
+            budget.release("prefill")
+        if d_pre > 0:
+            budget.allocate("prefill")
+            tier.add_worker(prefill_factory(), now=t)
+        if d_dec > 0:
+            budget.allocate("decode")
+            eng = decode_factory()
+            eng.on_finish = finished.append
+            fleet.add_replica(eng, now=t)
+        t += dt
+    stats = fleet.run(max_steps)
+    stats.n_prefill_final = tier.n_active
+    stats.scale_events += tier.scale_events
+    stats.budget = budget.to_dict()
+    return stats
 
 
 def run_autoscaled(fleet: Fleet, requests: Sequence[Request],

@@ -125,7 +125,10 @@ class EngineConfig:
     adapter_budget_bytes: float = 2e9
     mode: str = "lora"               # lora | jd
     prefetch: bool = False           # opportunistic warm-up of queued adapters
-    prefetch_depth: int = 4          # waiting-queue lookahead for prefetch
+    # waiting-queue lookahead for prefetch; None = adaptive — follow the
+    # router-fed queue depth (every request already known to the engine),
+    # so bursts warm proportionally more adapters ahead of admission
+    prefetch_depth: Optional[int] = None
 
 
 class ServingEngine:
@@ -174,10 +177,15 @@ class ServingEngine:
     def _prefetch_waiting(self) -> None:
         """Opportunistically warm adapters of queued requests.  Low priority:
         never stalls this step and never delays a later demand load (see
-        AdapterCache.prefetch)."""
+        AdapterCache.prefetch).  With ``prefetch_depth=None`` the lookahead
+        is adaptive: it tracks the routed queue itself rather than a static
+        depth, so a deep backlog warms more adapters ahead."""
         if not self.cfg.prefetch:
             return
-        for r in self.waiting[:self.cfg.prefetch_depth]:
+        depth = self.cfg.prefetch_depth
+        if depth is None:
+            depth = len(self.waiting)
+        for r in self.waiting[:depth]:
             if r.ready_time > self.clock:       # not yet known to the engine
                 break
             self.cache.prefetch(r.adapter_id,

@@ -11,17 +11,25 @@ moves prefill to a dedicated tier:
     collections pin their shared bases here exactly as on decode).
     Admission reuses the decode scheduler's adapter/cluster-aware ordering;
     prefill compute within an admitted batch is serialized (compute-bound).
-  - :class:`TransferLink` — cost model for shipping the produced KV cache
-    to the decode tier: fixed latency + size/bandwidth, serialized per link
-    (one link per prefill worker), overlapping the worker's next prefill.
-  - :class:`PrefillTier` — routes requests across workers (least-loaded,
-    deterministic) and stamps each request with ``prefill_done_time`` /
-    ``decode_ready_time`` so decode engines admit it only once its KV has
-    landed.
+  - :class:`~repro.serving.resources.KVFabric` — the shared, contended
+    prefill->decode interconnect.  Workers *record* each produced KV cache
+    on the fabric as its prefill completes (handoff never blocks the
+    worker's next prefill); the fabric schedules chunks across all workers'
+    transfers and stamps ``decode_ready_time`` (first chunk) /
+    ``kv_landed_time`` (last chunk).  A standalone worker owns a private
+    single-link-equivalent fabric, which reproduces the PR-2
+    :class:`TransferLink` times bit-exactly.
+  - :class:`PrefillTier` — routes requests across *active* workers
+    (least-outstanding, deterministic) and supports elastic membership
+    symmetric with the decode fleet: :meth:`add_worker` joins a worker
+    mid-stream, :meth:`retire_worker` stops routing to one while it drains
+    its remaining queue — so the joint autoscaler can shrink this tier to
+    fund the other under a fixed :class:`~repro.serving.resources.HardwareBudget`.
 
 The tier is feed-forward: decode never blocks prefill, so the whole tier
 can be simulated eagerly as requests are submitted (window-by-window under
-the autoscaler) without a global event queue.
+the autoscaler) without a global event queue; the fabric resolves at each
+drain, carrying channel backlog across windows.
 """
 from __future__ import annotations
 
@@ -30,16 +38,18 @@ from typing import Dict, List, Optional, Sequence
 
 from .adapter_cache import AdapterCache, CacheConfig
 from .request import Request
+from .resources import FabricConfig, FabricStats, KVFabric
 from .scheduler import Scheduler, SchedulerConfig
 
 
 @dataclasses.dataclass
 class TransferLink:
-    """KV handoff cost between the prefill and decode tiers.
+    """PR-2 compatibility: one private prefill->decode link.
 
-    Defaults model an intra-pod interconnect (ICI/NVLink-class): shipping a
-    512-token bf16 KV cache for an 8B-class model costs ~1 ms — small vs.
-    prefill, but not free under bursts when the link serializes.
+    Kept as the configuration surface for the degenerate fabric (a
+    single-worker fabric with serial chunks is bit-exact with this model:
+    ``latency + nbytes / bandwidth``, serialized per link).  New code should
+    configure :class:`~repro.serving.resources.FabricConfig` instead.
     """
     bandwidth: float = 50e9          # bytes/s prefill -> decode
     latency: float = 200e-6          # per-handoff fixed cost
@@ -55,6 +65,16 @@ class PrefillConfig:
     adapter_budget_bytes: float = 2e9
     mode: str = "lora"               # lora | jd (pins shared bases)
     link: TransferLink = dataclasses.field(default_factory=TransferLink)
+    # shared-fabric override: when set, the tier builds one KVFabric from
+    # this config and all workers contend on it (chunked/streamed handoff);
+    # when None, the tier's fabric is derived from `link` (aggregate
+    # bandwidth = one link's worth, serial chunks)
+    fabric: Optional[FabricConfig] = None
+
+    def fabric_config(self) -> FabricConfig:
+        return self.fabric or FabricConfig(bandwidth=self.link.bandwidth,
+                                           latency=self.link.latency,
+                                           chunk_bytes=0)
 
 
 @dataclasses.dataclass
@@ -65,6 +85,7 @@ class PrefillStats:
     transfer_time: float = 0.0       # sum of per-request KV handoff times
     kv_bytes_moved: int = 0
     n_swaps: int = 0
+    n_chunks: int = 0                # fabric chunks shipped (disagg)
 
     @classmethod
     def merged(cls, parts: Sequence["PrefillStats"]) -> "PrefillStats":
@@ -76,7 +97,14 @@ class PrefillStats:
             out.transfer_time += s.transfer_time
             out.kv_bytes_moved += s.kv_bytes_moved
             out.n_swaps += s.n_swaps
+            out.n_chunks += s.n_chunks
         return out
+
+    def add_fabric(self, fs: FabricStats) -> "PrefillStats":
+        self.transfer_time += fs.transfer_time
+        self.kv_bytes_moved += fs.kv_bytes_moved
+        self.n_chunks += fs.n_chunks
+        return self
 
     def to_dict(self) -> Dict:
         return {
@@ -85,6 +113,7 @@ class PrefillStats:
             "prefill_swap_s": self.swap_time,
             "kv_transfer_s": self.transfer_time,
             "kv_bytes_moved": self.kv_bytes_moved,
+            "kv_chunks": self.n_chunks,
             "prefill_n_swaps": self.n_swaps,
         }
 
@@ -95,10 +124,17 @@ class PrefillWorker:
     The executor provides ``prefill_time(req)``, ``adapter_bytes(aid)``,
     ``shared_bytes()`` and ``kv_bytes(req)`` (see
     :class:`~repro.serving.engine.CostModelExecutor`).
+
+    KV handoff goes through ``self.fabric``.  A worker constructed without
+    one owns a private fabric derived from ``cfg`` (PR-2 single-link
+    semantics) and resolves it on :meth:`drain`; a worker inside a
+    :class:`PrefillTier` is re-bound to the tier's shared fabric, which the
+    tier resolves after all workers drain.
     """
 
     def __init__(self, cfg: PrefillConfig, executor,
-                 cluster_of: Optional[Dict[int, int]] = None):
+                 cluster_of: Optional[Dict[int, int]] = None,
+                 fabric: Optional[KVFabric] = None):
         if cfg.max_batch < 1:
             raise ValueError("PrefillConfig.max_batch must be >= 1")
         self.cfg = cfg
@@ -108,8 +144,9 @@ class PrefillWorker:
         self.cache = AdapterCache(CacheConfig(cfg.adapter_budget_bytes))
         if cfg.mode == "jd":
             self.cache.pin_shared(executor.shared_bytes())
+        self.fabric = fabric or KVFabric(cfg.fabric_config())
+        self._owns_fabric = fabric is None
         self.clock = 0.0
-        self.link_free_at = 0.0
         self.waiting: List[Request] = []
         self.stats = PrefillStats()
 
@@ -122,18 +159,11 @@ class PrefillWorker:
         self.waiting.sort(key=lambda r: r.arrival_time)
 
     def _handoff(self, req: Request) -> None:
-        """Ship the KV cache over this worker's link (serialized) and stamp
-        the decode-readiness time."""
-        nbytes = self.executor.kv_bytes(req)
-        start = max(self.clock, self.link_free_at)
-        t_done = start + self.cfg.link.time_for(nbytes)
-        self.link_free_at = t_done
+        """Record the produced KV cache on the fabric (never blocks this
+        worker's next prefill); the fabric stamps readiness at resolve."""
         req.prefill_done_time = self.clock
-        req.transfer_time = t_done - self.clock
-        req.decode_ready_time = t_done
         req.prefilled = True
-        self.stats.transfer_time += req.transfer_time
-        self.stats.kv_bytes_moved += nbytes
+        self.fabric.request(req, self.clock, self.executor.kv_bytes(req))
 
     def step(self) -> bool:
         """Prefill one admitted batch; returns False when drained."""
@@ -158,7 +188,7 @@ class PrefillWorker:
         self.clock += stall
         self.stats.swap_time += stall
         # prefill is compute-bound: serialize within the batch; each request
-        # hands its KV off as soon as its own prefill finishes
+        # hands its KV to the fabric as soon as its own prefill finishes
         for r in batch:
             self.waiting.remove(r)
             r.start_time = self.clock
@@ -173,43 +203,96 @@ class PrefillWorker:
         while self.step():
             pass
         self.stats.n_swaps = self.cache.n_swaps
+        if self._owns_fabric:
+            self.fabric.resolve()
+            fs = self.fabric.stats
+            self.stats.transfer_time = fs.transfer_time
+            self.stats.kv_bytes_moved = fs.kv_bytes_moved
+            self.stats.n_chunks = fs.n_chunks
 
 
 class PrefillTier:
-    """Routes requests across prefill workers and runs them to completion.
+    """Routes requests across active prefill workers, runs them eagerly,
+    and resolves the shared KV fabric.
 
     Routing is least-outstanding with a deterministic index tiebreak (the
     tier has no adapter-affinity pressure of its own at jd mode — shared
     bases are pinned on every worker — and lora-mode affinity is dominated
-    by keeping the tier's queues short)."""
+    by keeping the tier's queues short).
 
-    def __init__(self, cfg: PrefillConfig, workers: Sequence[PrefillWorker]):
+    Membership is elastic and symmetric with the decode fleet:
+    :meth:`add_worker` joins a worker at a simulated time,
+    :meth:`retire_worker` stops routing to one (it drains what it has), so
+    an autoscaler can shrink this tier to fund decode replicas under a
+    fixed hardware budget — and vice versa.
+    """
+
+    def __init__(self, cfg: PrefillConfig, workers: Sequence[PrefillWorker],
+                 fabric: Optional[KVFabric] = None):
         if len(workers) != cfg.n_workers:
             raise ValueError(f"expected {cfg.n_workers} workers, "
                              f"got {len(workers)}")
         self.cfg = cfg
         self.workers = list(workers)
+        self.fabric = fabric or KVFabric(cfg.fabric_config())
+        for w in self.workers:
+            self._bind(w)
+        self.active: List[bool] = [True] * len(self.workers)
+        self.scale_events = 0
 
+    def _bind(self, worker: PrefillWorker) -> None:
+        worker.fabric = self.fabric
+        worker._owns_fabric = False
+
+    # -- elastic membership -------------------------------------------------
+    def _active_idxs(self) -> List[int]:
+        return [i for i, a in enumerate(self.active) if a]
+
+    @property
+    def n_active(self) -> int:
+        return len(self._active_idxs())
+
+    def add_worker(self, worker: PrefillWorker, now: float = 0.0) -> int:
+        """Join a fresh prefill worker at simulated time `now`."""
+        worker.clock = max(worker.clock, now)
+        self._bind(worker)
+        self.workers.append(worker)
+        self.active.append(True)
+        self.scale_events += 1
+        return len(self.workers) - 1
+
+    def retire_worker(self, i: int) -> None:
+        """Stop routing to worker `i`; it drains its remaining queue."""
+        if not self.active[i]:
+            return
+        if self.n_active == 1:
+            raise ValueError("cannot retire the last active prefill worker")
+        self.active[i] = False
+        self.scale_events += 1
+
+    # -- request flow -------------------------------------------------------
     def submit(self, reqs: Sequence[Request]) -> None:
+        idxs = self._active_idxs()
         for r in sorted(reqs, key=lambda r: r.arrival_time):
-            i = min(range(len(self.workers)),
-                    key=lambda j: (self.workers[j].outstanding,
-                                   self.workers[j].clock, j))
+            i = min(idxs, key=lambda j: (self.workers[j].outstanding,
+                                         self.workers[j].clock, j))
             r.prefill_replica = i
             self.workers[i].submit([r])
 
     def drain(self) -> None:
         for w in self.workers:
             w.drain()
+        self.fabric.resolve()
 
     def process(self, reqs: Sequence[Request]) -> List[Request]:
         """Submit + drain; returns the same requests, now KV-ready-stamped.
-        Incremental: worker clocks/queues persist across calls, so the
-        autoscaler can feed arrival windows one at a time."""
+        Incremental: worker clocks/queues and fabric backlog persist across
+        calls, so the autoscaler can feed arrival windows one at a time."""
         self.submit(reqs)
         self.drain()
         return list(reqs)
 
     @property
     def stats(self) -> PrefillStats:
-        return PrefillStats.merged([w.stats for w in self.workers])
+        merged = PrefillStats.merged([w.stats for w in self.workers])
+        return merged.add_fabric(self.fabric.stats)

@@ -22,20 +22,41 @@ class Request:
     prefilled: bool = False
     replica: Optional[int] = None    # set by fleet routing
     # disaggregated serving: set by the prefill tier when prefill runs on a
-    # separate replica and the KV cache is shipped to decode over a link
+    # separate replica and the KV cache is shipped to decode over the shared
+    # fabric.  With chunked/streamed handoff `decode_ready_time` is the
+    # FIRST chunk's landing (enough KV to start decoding) and
+    # `kv_landed_time` the last chunk's; they coincide on the serial path.
     prefill_replica: Optional[int] = None
     prefill_done_time: Optional[float] = None
-    transfer_time: float = 0.0       # KV handoff cost (prefill -> decode)
+    transfer_time: float = 0.0       # KV handoff span (prefill -> all landed)
     decode_ready_time: Optional[float] = None
+    kv_landed_time: Optional[float] = None
 
     @property
     def ready_time(self) -> float:
         """Earliest time a decode engine may admit this request: the arrival
-        for colocated serving, the KV-transfer completion when prefill ran on
-        a disaggregated prefill tier."""
+        for colocated serving, the first KV chunk's landing when prefill ran
+        on a disaggregated prefill tier."""
         if self.decode_ready_time is not None:
             return self.decode_ready_time
         return self.arrival_time
+
+    @property
+    def prefill_lag(self) -> Optional[float]:
+        """The prefill tier's contribution to this request's TTFT: arrival ->
+        decode-ready (queueing + prefill compute + first-chunk transfer).
+        None for colocated serving."""
+        if self.decode_ready_time is None:
+            return None
+        return self.decode_ready_time - self.arrival_time
+
+    @property
+    def decode_wait(self) -> Optional[float]:
+        """The decode tier's contribution to TTFT: decode-ready (or arrival,
+        when colocated) -> first token."""
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.ready_time
 
     @property
     def done(self) -> bool:

@@ -1,0 +1,247 @@
+"""Unified serving resources: a fixed hardware budget + a shared KV fabric.
+
+Two abstractions the rest of the serving stack draws from instead of owning
+capacity itself:
+
+  - :class:`HardwareBudget` — N accelerators total, with per-role footprints
+    (accelerators per prefill worker / per decode replica).  Both tiers
+    allocate from the same pool, so the joint autoscaler can only grow one
+    tier by leaving room in — or actively shrinking — the other.  This is
+    the Splitwise/InfiniLoRA framing: phase-splitting pays off only when the
+    *split itself* is sized under the real fixed budget, not when each tier
+    can grow unboundedly.
+
+  - :class:`KVFabric` — the prefill->decode KV interconnect as one shared,
+    contended resource.  PR 2 gave every prefill worker a private
+    :class:`~repro.serving.prefill.TransferLink`, which overstates achievable
+    throughput exactly where disaggregated systems pay: N workers bursting
+    KV simultaneously do not each see full bandwidth.  The fabric serializes
+    *chunks* onto a single shared channel (aggregate bandwidth, per-chunk
+    fixed latency) with deterministic fair interleaving across in-flight
+    transfers (fewest-chunks-sent first), and supports chunked/streamed
+    handoff: the first landed chunk unblocks decode admission
+    (``decode_ready_time``), while the tail of the transfer overlaps decode
+    (``kv_landed_time``).
+
+Degenerate configurations are exact by construction:
+
+  * one worker, ``chunk_bytes == 0`` (whole-KV serial handoff) reproduces
+    the PR-2 ``TransferLink`` times bit-exactly — ``start = max(free_at,
+    prefill_done)``, ``done = start + latency + nbytes / bandwidth``;
+  * ``chunk_bytes >= nbytes`` is a single chunk, i.e. the serial path.
+
+The fabric is resolved lazily: prefill workers *record* transfers as their
+simulated prefill completes (handoff never blocks the worker's next
+prefill), and :meth:`KVFabric.resolve` then schedules all recorded chunks
+on the shared channel and stamps the requests.  Resolution happens per
+drain (window-by-window under the autoscaler), so channel backlog carries
+across windows through ``free_at``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List
+
+
+# ---------------------------------------------------------------------------
+# hardware budget
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BudgetConfig:
+    """A fixed pool of accelerators shared by both serving tiers."""
+
+    total_accelerators: int = 8
+    prefill_accels_per_worker: int = 1
+    decode_accels_per_replica: int = 1
+
+    def cost(self, role: str) -> int:
+        if role == "prefill":
+            return self.prefill_accels_per_worker
+        if role == "decode":
+            return self.decode_accels_per_replica
+        raise ValueError(f"unknown role {role!r}; one of ('prefill', 'decode')")
+
+
+class HardwareBudget:
+    """Allocation ledger over a :class:`BudgetConfig`.
+
+    The budget owns capacity; tiers merely hold allocations.  ``allocate``
+    raises when the pool is exhausted — callers must check
+    :meth:`can_allocate` (or free capacity by retiring from the other role)
+    first, which is exactly the trade the joint autoscaler implements.
+    """
+
+    def __init__(self, cfg: BudgetConfig):
+        if cfg.total_accelerators < 1:
+            raise ValueError("budget needs at least one accelerator")
+        self.cfg = cfg
+        self.allocated: Dict[str, int] = {"prefill": 0, "decode": 0}
+
+    @property
+    def in_use(self) -> int:
+        return sum(self.allocated[role] * self.cfg.cost(role)
+                   for role in self.allocated)
+
+    @property
+    def available(self) -> int:
+        return self.cfg.total_accelerators - self.in_use
+
+    def count(self, role: str) -> int:
+        return self.allocated[role]
+
+    def can_allocate(self, role: str) -> bool:
+        return self.cfg.cost(role) <= self.available
+
+    def allocate(self, role: str) -> None:
+        if not self.can_allocate(role):
+            raise MemoryError(
+                f"hardware budget exhausted: {role} needs "
+                f"{self.cfg.cost(role)} accelerators, {self.available} free "
+                f"of {self.cfg.total_accelerators}")
+        self.allocated[role] += 1
+
+    def release(self, role: str) -> None:
+        if self.allocated[role] < 1:
+            raise ValueError(f"no {role} allocation to release")
+        self.allocated[role] -= 1
+
+    def to_dict(self) -> Dict:
+        return {
+            "total_accelerators": self.cfg.total_accelerators,
+            "prefill_workers": self.allocated["prefill"],
+            "decode_replicas": self.allocated["decode"],
+            "accelerators_free": self.available,
+        }
+
+
+# ---------------------------------------------------------------------------
+# shared KV fabric
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FabricConfig:
+    """Shared prefill->decode interconnect.
+
+    ``bandwidth`` is the *aggregate* fabric bandwidth all prefill workers
+    contend for (PR 2's per-worker private links were ``n_workers`` times
+    this).  ``latency`` is paid per chunk — small chunks stream the first
+    bytes to decode sooner but occupy the channel longer in total, which is
+    the real chunking trade-off.  ``chunk_bytes == 0`` ships each KV cache
+    as one chunk (the serial PR-2 path).
+    """
+
+    bandwidth: float = 50e9          # aggregate bytes/s prefill -> decode
+    latency: float = 200e-6          # per-chunk fixed cost
+    chunk_bytes: int = 0             # 0 = whole-KV serial handoff
+
+    def __post_init__(self):
+        if self.bandwidth <= 0:
+            raise ValueError("fabric bandwidth must be > 0")
+        if self.chunk_bytes < 0:
+            raise ValueError("chunk_bytes must be >= 0 (0 = serial)")
+
+    def n_chunks(self, nbytes: int) -> int:
+        if self.chunk_bytes <= 0 or nbytes <= self.chunk_bytes:
+            return 1
+        return math.ceil(nbytes / self.chunk_bytes)
+
+
+@dataclasses.dataclass
+class FabricStats:
+    n_transfers: int = 0
+    n_chunks: int = 0
+    transfer_time: float = 0.0       # sum of per-request ready->landed spans
+    kv_bytes_moved: int = 0
+    busy_time: float = 0.0           # channel occupancy (latency + wire time)
+
+
+class _Transfer:
+    """One in-flight KV handoff (all chunks available at ``ready_at``)."""
+
+    __slots__ = ("req", "ready_at", "nbytes", "n_chunks", "chunks_sent")
+
+    def __init__(self, req, ready_at: float, nbytes: int, n_chunks: int):
+        self.req = req
+        self.ready_at = ready_at
+        self.nbytes = nbytes
+        self.n_chunks = n_chunks
+        self.chunks_sent = 0
+
+    def next_chunk_bytes(self, chunk_bytes: int) -> int:
+        if self.n_chunks == 1:
+            return self.nbytes
+        if self.chunks_sent < self.n_chunks - 1:
+            return chunk_bytes
+        return self.nbytes - chunk_bytes * (self.n_chunks - 1)
+
+
+class KVFabric:
+    """Deterministic chunk scheduler over one shared serialized channel.
+
+    Transfers are recorded with :meth:`request` as prefill completes and
+    scheduled by :meth:`resolve`: chunks are non-preemptive; among in-flight
+    transfers the next chunk goes to the one with the fewest chunks already
+    sent (ties: earlier ``ready_at``, then lower rid) — a fair round-robin
+    that bounds head-of-line blocking by one chunk, so a short handoff slips
+    between a long transfer's chunks instead of waiting out the whole thing.
+    """
+
+    def __init__(self, cfg: FabricConfig):
+        self.cfg = cfg
+        self.free_at = 0.0
+        self.stats = FabricStats()
+        self._pending: List[_Transfer] = []
+
+    @classmethod
+    def from_link(cls, link) -> "KVFabric":
+        """A fabric equivalent to one PR-2 ``TransferLink`` (serial chunks)."""
+        return cls(FabricConfig(bandwidth=link.bandwidth,
+                                latency=link.latency, chunk_bytes=0))
+
+    def request(self, req, ready_at: float, nbytes: int) -> None:
+        """Record a KV handoff; scheduled at the next :meth:`resolve`."""
+        self._pending.append(
+            _Transfer(req, ready_at, nbytes, self.cfg.n_chunks(nbytes)))
+
+    def resolve(self) -> None:
+        """Schedule all recorded transfers' chunks and stamp the requests:
+        ``decode_ready_time`` at the first chunk's landing,
+        ``kv_landed_time`` (and ``transfer_time``) at the last."""
+        if not self._pending:
+            return
+        pending = sorted(self._pending,
+                         key=lambda tr: (tr.ready_at, tr.req.rid))
+        self._pending = []
+        active: List[_Transfer] = []
+        i = 0
+        t = self.free_at
+        while i < len(pending) or active:
+            if not active:
+                t = max(t, pending[i].ready_at)
+            while i < len(pending) and pending[i].ready_at <= t:
+                active.append(pending[i])
+                i += 1
+            tr = min(active, key=lambda x: (x.chunks_sent, x.ready_at,
+                                            x.req.rid))
+            size = tr.next_chunk_bytes(self.cfg.chunk_bytes)
+            start = max(t, tr.ready_at)
+            done = start + self.cfg.latency + size / self.cfg.bandwidth
+            self.stats.busy_time += done - start
+            self.stats.n_chunks += 1
+            t = done
+            tr.chunks_sent += 1
+            if tr.chunks_sent == 1:
+                tr.req.decode_ready_time = done
+            if tr.chunks_sent == tr.n_chunks:
+                tr.req.kv_landed_time = done
+                tr.req.transfer_time = done - tr.ready_at
+                self.stats.n_transfers += 1
+                self.stats.transfer_time += tr.req.transfer_time
+                self.stats.kv_bytes_moved += tr.nbytes
+                active.remove(tr)
+        self.free_at = t

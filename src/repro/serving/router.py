@@ -26,15 +26,18 @@ Two orthogonal production extensions on top of the policies:
 
   * **Disaggregated prefill** — pass a
     :class:`~repro.serving.prefill.PrefillTier`: requests are routed
-    prefill-tier-first (the tier stamps ``decode_ready_time`` via its
-    :class:`~repro.serving.prefill.TransferLink`), then placed on decode
-    replicas with the configured policy; decode engines admit a request
-    only once its KV has landed.
+    prefill-tier-first (the tier stamps ``decode_ready_time`` via the
+    shared :class:`~repro.serving.resources.KVFabric` — first chunk landed),
+    then placed on decode replicas with the configured policy; decode
+    engines admit a request only once enough of its KV has landed.
   * **Elastic membership** — :meth:`add_replica` / :meth:`retire_replica`
     let an autoscaler grow/shrink the decode tier mid-stream.  Retired
     replicas drain their queue but receive no new work; membership changes
     re-home JD clusters (sticky affinity maps are rebuilt against the new
-    active set on next sighting).
+    active set on next sighting).  The prefill tier has the symmetric
+    operations (``PrefillTier.add_worker`` / ``retire_worker``), so a joint
+    autoscaler can trade capacity between the tiers under one fixed
+    :class:`~repro.serving.resources.HardwareBudget`.
 """
 from __future__ import annotations
 
@@ -70,6 +73,8 @@ class FleetStats:
     n_replicas_final: Optional[int] = None   # active replicas at drain time
     scale_events: int = 0                # autoscaler membership changes
     autoscaler: Optional[List] = None    # ScaleDecision history if autoscaled
+    n_prefill_final: Optional[int] = None    # active prefill workers (joint)
+    budget: Optional[Dict] = None        # HardwareBudget.to_dict() (joint)
 
     def to_dict(self) -> Dict:
         d = self.total.to_dict()
@@ -81,6 +86,10 @@ class FleetStats:
         if self.n_replicas_final is not None:
             d["n_replicas_final"] = self.n_replicas_final
             d["scale_events"] = self.scale_events
+        if self.n_prefill_final is not None:
+            d["n_prefill_final"] = self.n_prefill_final
+        if self.budget is not None:
+            d["budget"] = self.budget
         return d
 
 

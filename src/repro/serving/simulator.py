@@ -21,13 +21,16 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.serving.autoscaler import (Autoscaler, AutoscalerConfig, SLOConfig,
-                                      run_autoscaled)
+from repro.serving.autoscaler import (Autoscaler, AutoscalerConfig,
+                                      JointAutoscaler, JointAutoscalerConfig,
+                                      SLOConfig, run_autoscaled,
+                                      run_joint_autoscaled)
 from repro.serving.engine import (CostModelExecutor, EngineConfig,
                                   ModelFootprint, ServingEngine,
                                   ServingHardware)
 from repro.serving.prefill import PrefillConfig, PrefillTier, PrefillWorker
 from repro.serving.request import Request
+from repro.serving.resources import BudgetConfig, HardwareBudget
 from repro.serving.router import Fleet, FleetConfig, FleetStats
 from repro.serving.scheduler import SchedulerConfig
 from repro.serving.workload import WorkloadSpec, make_workload
@@ -101,18 +104,29 @@ def build_engine(model_cfg, mode: str, n_adapters: int, budget: float,
         ex, cluster_of)
 
 
+def build_prefill_worker(model_cfg, mode: str, n_adapters: int, budget: float,
+                         prefill_cfg: PrefillConfig, hw: ServingHardware,
+                         cluster_of: Dict[int, int],
+                         setting: Dict) -> PrefillWorker:
+    """One prefill worker (also the joint autoscaler's prefill factory)."""
+    fp = serving_footprint(model_cfg, mode, n_adapters, setting)
+    cfg = dataclasses.replace(prefill_cfg, mode=mode,
+                              adapter_budget_bytes=budget)
+    return PrefillWorker(cfg, CostModelExecutor(hw, fp, mode, cluster_of),
+                         cluster_of)
+
+
 def build_prefill_tier(model_cfg, mode: str, n_adapters: int, budget: float,
                        prefill_cfg: PrefillConfig, hw: ServingHardware,
                        cluster_of: Dict[int, int],
                        setting: Dict) -> PrefillTier:
     """Prefill workers with the same footprint/cost model and per-worker
     adapter budget as the decode tier (adapters must be resident on the
-    prefill device too)."""
-    fp = serving_footprint(model_cfg, mode, n_adapters, setting)
+    prefill device too); all workers share the tier's KV fabric."""
     cfg = dataclasses.replace(prefill_cfg, mode=mode,
                               adapter_budget_bytes=budget)
-    workers = [PrefillWorker(cfg, CostModelExecutor(hw, fp, mode, cluster_of),
-                             cluster_of)
+    workers = [build_prefill_worker(model_cfg, mode, n_adapters, budget,
+                                    prefill_cfg, hw, cluster_of, setting)
                for _ in range(cfg.n_workers)]
     return PrefillTier(cfg, workers)
 
@@ -146,30 +160,53 @@ def run_elastic_study(model_cfg, mode: str, n_adapters: int,
                       cluster_assign_seed: int = 0,
                       prefill_cfg: Optional[PrefillConfig] = None,
                       autoscaler_cfg: Optional[AutoscalerConfig] = None,
-                      slo: Optional[SLOConfig] = None) -> FleetStats:
+                      slo: Optional[SLOConfig] = None,
+                      budget_cfg: Optional[BudgetConfig] = None,
+                      joint_cfg: Optional[JointAutoscalerConfig] = None
+                      ) -> FleetStats:
     """One serving cell, optionally disaggregated and/or autoscaled.
 
     With `autoscaler_cfg` the fleet starts at ``fleet_cfg.n_replicas``
     decode replicas and elastically scales between the autoscaler's
-    min/max against `slo`; otherwise the replica set is fixed.  Returns
-    merged :class:`FleetStats` (``stats.autoscaler`` holds the decision
-    history when autoscaled)."""
+    min/max against `slo`; otherwise the replica set is fixed.  With
+    `budget_cfg` (requires `prefill_cfg`) the run is *jointly* autoscaled:
+    both tiers start at their configured sizes and the
+    :class:`~repro.serving.autoscaler.JointAutoscaler` trades prefill
+    workers against decode replicas under the fixed accelerator pool.
+    Returns merged :class:`FleetStats` (``stats.autoscaler`` holds the
+    decision history when autoscaled)."""
     hw = hw or ServingHardware()
     setting, cluster_of, budget = memory_matched_setup(
         model_cfg, n_adapters, cluster_assign_seed)
     fleet = build_fleet(model_cfg, mode, n_adapters, budget, fleet_cfg, hw,
                         cluster_of, setting, max_batch,
                         prefill_cfg=prefill_cfg)
+
+    def decode_factory() -> ServingEngine:
+        return build_engine(model_cfg, mode, n_adapters, budget, hw,
+                            cluster_of, setting, max_batch)
+
+    if budget_cfg is not None:
+        if prefill_cfg is None:
+            raise ValueError("joint autoscaling needs prefill_cfg "
+                             "(disaggregated fleet)")
+        scaler = JointAutoscaler(joint_cfg or JointAutoscalerConfig(),
+                                 slo or SLOConfig(),
+                                 HardwareBudget(budget_cfg))
+
+        def prefill_factory() -> PrefillWorker:
+            return build_prefill_worker(model_cfg, mode, n_adapters, budget,
+                                        prefill_cfg, hw, cluster_of, setting)
+
+        stats = run_joint_autoscaled(fleet, requests, scaler,
+                                     decode_factory, prefill_factory)
+        stats.autoscaler = scaler.history
+        return stats
     if autoscaler_cfg is None:
         fleet.submit(requests)
         return fleet.run()
     scaler = Autoscaler(autoscaler_cfg, slo or SLOConfig())
-
-    def factory() -> ServingEngine:
-        return build_engine(model_cfg, mode, n_adapters, budget, hw,
-                            cluster_of, setting, max_batch)
-
-    stats = run_autoscaled(fleet, requests, scaler, factory)
+    stats = run_autoscaled(fleet, requests, scaler, decode_factory)
     stats.autoscaler = scaler.history
     return stats
 

@@ -354,6 +354,29 @@ def test_prefetch_of_resident_adapter_is_noop():
     assert c.n_prefetches == 1 and c.used_bytes == 90
 
 
+def test_adaptive_prefetch_depth_follows_queue():
+    """With prefetch_depth=None (adaptive) the lookahead tracks the routed
+    queue: a deeper backlog of distinct adapters warms more of them ahead
+    (n_prefetches grows with queue depth, not with a static cap)."""
+    def run(n_queued):
+        eng = ServingEngine(
+            EngineConfig(scheduler=SchedulerConfig(max_batch=1),
+                         adapter_budget_bytes=1e9, prefetch=True),
+            FixedCostExecutor(prefill=0.01, decode=0.01))
+        eng.cache = AdapterCache(CacheConfig(1e9, DMAModel(bandwidth=1e6,
+                                                           latency=0.0)))
+        reqs = [Request(rid=i, adapter_id=i, prompt_len=8, max_new_tokens=2,
+                        arrival_time=0.0) for i in range(n_queued)]
+        eng.submit(reqs)
+        eng.run()
+        return eng.cache.n_prefetches
+
+    shallow, deep = run(4), run(12)
+    assert deep > shallow
+    # the old static default (4) could never have prefetched this much
+    assert deep > 4
+
+
 def test_engine_prefetch_reduces_stall_not_throughput():
     def run(prefetch):
         eng = ServingEngine(
