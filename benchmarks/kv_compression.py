@@ -1,0 +1,148 @@
+"""Compressed-KV wire-transfer study: bandwidth x compression mode x skew.
+
+PR 3's joint-budget study showed the prefill->decode KV handoff is the
+bottleneck on slow interconnects: on a 2 GB/s shared fabric a 256-token
+prompt ships ~34 MB of bf16 KV, and the fabric saturates long before the
+decode tier does.  This study applies the paper's compress-then-serve
+thesis to the wire itself (see ``repro.serving.resources.KVCompressionConfig``
+and the grounding Pallas kernels in ``repro.kernels.kv_quant``):
+
+1. **Bandwidth** — the shared fabric's aggregate bytes/s; at 2 GB/s the
+   handoff is transfer-bound (where compression should win), at 50 GB/s
+   it is not (where compression only pays its quant/dequant cost).
+2. **Compression mode** — raw | int8 | int4 | lowrank, all streamed in
+   16 MB chunks (see ``CHUNK``), vs. a serial raw reference.
+3. **Skew** — adapter popularity, as in the fleet/joint studies.
+
+A parity cell reruns PR 3's ``joint_zipf1.0_b6_fab50g_static3x3`` cell
+with the compression field left at None: its throughput must stay
+bit-exact with ``benchmarks/baselines/BENCH_joint.json`` (asserted in
+tests/test_kvcomp.py), proving the compression path is inert when off.
+
+CSV columns: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List, Optional
+
+from repro.configs import get_config
+from repro.serving.request import Request
+from repro.serving.resources import FabricConfig, KVCompressionConfig
+from repro.serving.workload import WorkloadSpec, make_workload
+
+try:
+    from .common import csv_row
+    from .joint_budget import phase_shift_workload, static_split_cell
+except ImportError:                      # run as a script, not a module
+    from common import csv_row
+    from joint_budget import phase_shift_workload, static_split_cell
+
+N_ADAPTERS = 256
+# 16 MB streamed chunks (layer-group granularity on a ~34 MB KV).  This is
+# the transfer-bound sweet spot the study targets: on a 2 GB/s fabric a raw
+# 16 MB first chunk serializes at 8 ms — EXCEEDING the 150 req/s arrival
+# rate's 6.7 ms inter-arrival budget, so the first-chunk queue grows and
+# TTFT becomes transfer-bound; int8 halves the chunk's wire size (~4 ms)
+# and keeps the queue drained.  (With tiny chunks the fair interleave's
+# first-chunk priority hides any wire-size effect behind prefill queueing.)
+CHUNK = 1 << 24
+
+MODES = [
+    ("raw", None),
+    ("int8", KVCompressionConfig(mode="int8")),
+    ("int4", KVCompressionConfig(mode="int4")),
+    ("lowrank", KVCompressionConfig(mode="lowrank", lowrank_ratio=0.25)),
+]
+
+
+def transfer_bound_workload(alpha: float = 1.0, seed: int = 0,
+                            n_requests: int = 300) -> List[Request]:
+    """Prompt-heavy gamma-burst stream (256-token prompts) whose KV volume
+    saturates a 2 GB/s fabric — the regime the ROADMAP item targets."""
+    return make_workload(WorkloadSpec(
+        n_requests=n_requests, n_adapters=N_ADAPTERS,
+        popularity="uniform" if alpha == 0 else "zipf", zipf_alpha=alpha,
+        arrival="gamma", arrival_rate=150.0, burst_cv=4.0,
+        prompt_len_mean=256, prompt_len_std=32, new_tokens=32, seed=seed))
+
+
+def compression_cell(cfg, requests: List[Request], bandwidth: float,
+                     compression: Optional[KVCompressionConfig],
+                     chunk_bytes: int = CHUNK, n_prefill: int = 3,
+                     n_decode: int = 3):
+    """One fixed-split disaggregated cell on a compressing fabric."""
+    fabric = FabricConfig(bandwidth=bandwidth, chunk_bytes=chunk_bytes,
+                          compression=compression)
+    return static_split_cell(cfg, requests, n_prefill, n_decode,
+                             fabric=fabric)
+
+
+def parity_cell(cfg):
+    """PR 3's quick static3x3 joint-budget cell, compression off — must
+    reproduce BENCH_joint.json's rps bit-exactly."""
+    reqs = phase_shift_workload(alpha=1.0)[:1000]
+    return static_split_cell(cfg, reqs, 3, 3, fabric=None)
+
+
+def main(quick: bool = True, json_path: Optional[str] = None):
+    cfg = get_config("mistral-7b")
+    bandwidths = [("bw2g", 2e9)] if quick else [("bw2g", 2e9),
+                                                ("bw8g", 8e9),
+                                                ("bw50g", 50e9)]
+    skews = [("zipf1.0", 1.0)] if quick else [("uniform", 0.0),
+                                              ("zipf1.0", 1.0)]
+    rows = []
+    metrics = {}
+
+    def record(name, stats, dt, p95_raw=None):
+        d = stats.to_dict()
+        wire = d.get("kv_bytes_moved", 0)
+        raw = d.get("kv_raw_bytes", 0) or wire
+        derived = (f"rps={d['throughput_rps']:.2f};"
+                   f"ttft_p95={d['ttft_p95_s'] * 1e3:.1f}ms;"
+                   f"wire_ratio={wire / max(raw, 1):.3f}")
+        if p95_raw is not None:
+            derived += f";beats_raw_chunked={d['ttft_p95_s'] < p95_raw}"
+        rows.append(csv_row(name, dt, derived))
+        metrics[name] = {"rps": d["throughput_rps"]}
+        return d["ttft_p95_s"]
+
+    for skew_name, alpha in skews:
+        reqs = transfer_bound_workload(alpha=alpha)
+        for bw_name, bw in bandwidths:
+            # serial raw handoff: the PR-2-shaped worst case on this fabric
+            t0 = time.perf_counter()
+            stats = compression_cell(cfg, reqs, bw, None, chunk_bytes=0)
+            record(f"kvcomp_{skew_name}_{bw_name}_raw_serial", stats,
+                   (time.perf_counter() - t0) * 1e6)
+            p95_raw = None
+            for mode_name, comp in MODES:
+                t0 = time.perf_counter()
+                stats = compression_cell(cfg, reqs, bw, comp)
+                p95 = record(f"kvcomp_{skew_name}_{bw_name}_{mode_name}",
+                             stats, (time.perf_counter() - t0) * 1e6,
+                             p95_raw=p95_raw)
+                if mode_name == "raw":
+                    p95_raw = p95
+
+    t0 = time.perf_counter()
+    stats = parity_cell(cfg)
+    record("kvcomp_parity_joint_static3x3", stats,
+           (time.perf_counter() - t0) * 1e6)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep for CI smoke")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write deterministic metrics as JSON")
+    args = ap.parse_args()
+    print("\n".join(main(quick=args.quick, json_path=args.json)))

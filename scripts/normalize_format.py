@@ -8,6 +8,9 @@ applies the formatter's *mechanically safe* rules —
     double quote),
   - strip trailing whitespace and normalize the EOF newline,
   - exactly two blank lines between top-level definitions,
+  - at most two consecutive blank lines at module level and at most one
+    inside any indented block (runs inside brackets or strings are left
+    alone),
 
 — and verifies after every transformation that the file's AST is unchanged
 (``ast.dump`` equality), dropping any transformation that is not provably
@@ -144,6 +147,53 @@ def blank_lines(text: str) -> str:
     return "\n".join(ln for _, ln in out) + "\n"
 
 
+def collapse_blank_runs(text: str) -> str:
+    """Ruff-format's empty-line cap: at most two consecutive blank lines at
+    module level, at most one inside an indented block.  Only lines the
+    tokenizer sees as blank NL lines are touched — blank lines inside
+    strings never produce NL tokens, and runs inside brackets (implicit
+    continuations) are skipped as not mechanically safe."""
+    try:
+        toks = list(tokenize.generate_tokens(io.StringIO(text).readline))
+    except (tokenize.TokenError, IndentationError):
+        return text
+    blank_rows = set()
+    depth = 0
+    for tok in toks:
+        if tok.type == tokenize.OP:
+            if tok.string in "([{":
+                depth += 1
+            elif tok.string in ")]}":
+                depth -= 1
+        elif (tok.type == tokenize.NL and depth == 0
+              and tok.line.strip() == ""):
+            blank_rows.add(tok.start[0])
+    lines = text.splitlines()
+    out = []
+    i = 0
+    while i < len(lines):
+        if (i + 1) in blank_rows:
+            j = i
+            while j + 1 < len(lines) and (j + 2) in blank_rows:
+                j += 1
+            # depth comes from the next CODE line: comment lines (which may
+            # sit at column 0 inside a block) are skipped, so a blank run
+            # above a commented statement still caps at the block's 1
+            nxt = j + 1
+            while nxt < len(lines) and (lines[nxt].strip() == ""
+                                        or lines[nxt].lstrip()
+                                        .startswith("#")):
+                nxt += 1
+            indented = (nxt < len(lines)
+                        and len(lines[nxt]) > len(lines[nxt].lstrip()))
+            out.extend([""] * min(j - i + 1, 1 if indented else 2))
+            i = j + 1
+        else:
+            out.append(lines[i])
+            i += 1
+    return "\n".join(out) + ("\n" if text.endswith("\n") else "")
+
+
 def process(path: Path, check: bool) -> bool:
     """Returns True when the file was (or would be) changed."""
     src = path.read_text()
@@ -152,7 +202,8 @@ def process(path: Path, check: bool) -> bool:
     except SyntaxError:
         return False
     cur = src
-    for step in (requote, strip_trailing_ws, blank_lines):
+    for step in (requote, strip_trailing_ws, blank_lines,
+                 collapse_blank_runs):
         cand = step(cur)
         if cand == cur:
             continue

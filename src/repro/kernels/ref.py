@@ -57,6 +57,27 @@ def sigma_bmm_ref(t: Array, sigma: Array, ids: Array) -> Array:
     return jnp.einsum("tr,trq->tq", t.astype(jnp.float32), sig).astype(t.dtype)
 
 
+def kv_quant_ref(x: Array, bits: int = 8) -> Tuple[Array, Array]:
+    """Per-channel symmetric KV quantization oracle.
+
+    x: (T, C) — a KV block, T tokens by C channels.  One f32 scale per
+    channel (absmax / qmax); values are round-to-nearest int8 in
+    [-qmax, qmax] (int4 values live in int8 storage here — the Pallas
+    kernel packs two per byte; see kv_quant.py).
+    """
+    qmax = {8: 127, 4: 7}[bits]
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=0, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / qmax, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def kv_dequant_ref(q: Array, scale: Array,
+                   out_dtype=jnp.float32) -> Array:
+    """Dequantization oracle: values (T, C) int8 x per-channel scales."""
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(out_dtype)
+
+
 def flash_decode_ref(q: Array, k: Array, v: Array,
                      kv_len: Optional[Array] = None) -> Array:
     """Decode attention oracle.  q: (B, H, hd); k/v: (B, S, Kv, hd)."""

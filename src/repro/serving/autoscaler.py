@@ -27,6 +27,14 @@ tier from its queue depth and its TTFT contribution (arrival ->
 decode-ready), and when the budget pool is exhausted the policy *trades* —
 it retires a worker/replica from a comfortable tier to fund the pressured
 one.  :func:`run_joint_autoscaled` is the matching window driver.
+
+With compressed KV handoffs
+(:class:`~repro.serving.resources.KVCompressionConfig`) the decode tier
+also pays a per-request dequantization cost at admission; the driver
+reports that load as a window utilization fraction and the policy refuses
+to classify a decode tier cold while it exceeds
+``decompress_cold_util`` — wire compression must not trick the trader
+into robbing the tier that is paying for it.
 """
 from __future__ import annotations
 
@@ -131,6 +139,11 @@ class JointAutoscalerConfig:
     down_fraction: float = 0.4       # scale down only below this share frac
     backlog_per_replica: float = 4.0  # per-tier "small backlog" bound
     cooldown_intervals: int = 2      # quiet windows after any change
+    # compressed-KV handoff: a decode tier spending more than this fraction
+    # of its window capacity on KV decompression is never classified cold —
+    # retiring a replica would re-concentrate that dequantization load on
+    # the survivors even when per-request decode waits look comfortable
+    decompress_cold_util: float = 0.25
 
 
 @dataclasses.dataclass
@@ -147,6 +160,7 @@ class JointScaleDecision:
     decode_backlog: int
     d_prefill: int
     d_decode: int
+    decompress_util: float = 0.0     # decode-tier KV-dequant utilization
 
 
 class JointAutoscaler:
@@ -181,8 +195,14 @@ class JointAutoscaler:
     def decide(self, now: float, ttfts: Sequence[float],
                tpots: Sequence[float], decode_waits: Sequence[float],
                prefill_lags: Sequence[float], n_prefill: int, n_decode: int,
-               prefill_backlog: int, decode_backlog: int) -> Tuple[int, int]:
-        """(prefill delta, decode delta) for this window, each in -1/0/+1."""
+               prefill_backlog: int, decode_backlog: int,
+               decompress_util: float = 0.0) -> Tuple[int, int]:
+        """(prefill delta, decode delta) for this window, each in -1/0/+1.
+
+        ``decompress_util`` is the decode tier's window-fraction spent
+        dequantizing compressed KV handoffs (0 when the fabric ships raw
+        KV); it vetoes the cold classification — see
+        :attr:`JointAutoscalerConfig.decompress_cold_util`."""
         cfg = self.cfg
         ttft_p95 = self._p95(ttfts)
         tpot_p95 = self._p95(tpots)
@@ -204,7 +224,8 @@ class JointAutoscaler:
                     and dwait_p95 < cfg.down_fraction * dec_slo
                     and tpot_p95 <= cfg.down_fraction * min(self.slo.tpot_p95,
                                                             1e12)
-                    and decode_backlog <= n_decode)
+                    and decode_backlog <= n_decode
+                    and decompress_util < cfg.decompress_cold_util)
 
         d_pre = d_dec = 0
         if self._cooldown > 0:
@@ -248,7 +269,8 @@ class JointAutoscaler:
             free_accels=self.budget.available, ttft_p95=ttft_p95,
             tpot_p95=tpot_p95, prefill_lag_p95=pre_p95,
             decode_wait_p95=dwait_p95, prefill_backlog=prefill_backlog,
-            decode_backlog=decode_backlog, d_prefill=d_pre, d_decode=d_dec))
+            decode_backlog=decode_backlog, d_prefill=d_pre, d_decode=d_dec,
+            decompress_util=decompress_util))
         return d_pre, d_dec
 
 
@@ -289,6 +311,7 @@ def run_joint_autoscaled(fleet: Fleet, requests: Sequence[Request],
     i = 0
     window: List[Request] = []       # this window's arrivals (stamped)
     recent: List[Request] = []       # arrivals still possibly in prefill
+    pending_decomp: List[Request] = []   # compressed, dequant not yet billed
     while True:
         j = i
         while j < len(reqs) and reqs[j].arrival_time < t:
@@ -297,12 +320,22 @@ def run_joint_autoscaled(fleet: Fleet, requests: Sequence[Request],
         if j > i:
             fleet.submit(window)
             recent.extend(window)
+            pending_decomp.extend(r for r in window
+                                  if r.kv_decompress_cost > 0)
             i = j
         fleet.advance_to(t)
         ttfts = [r.ttft for r in finished if r.ttft is not None]
         tpots = [r.tpot for r in finished if r.tpot is not None]
         dwaits = [r.decode_wait for r in finished
                   if r.decode_wait is not None]
+        # bill dequantization to the window it actually ran in (admission
+        # stamps decompress_done_time), not the window the request finishes
+        decomp_total = sum(r.kv_decompress_cost for r in pending_decomp
+                           if r.decompress_done_time is not None
+                           and r.decompress_done_time <= t)
+        pending_decomp = [r for r in pending_decomp
+                          if r.decompress_done_time is None
+                          or r.decompress_done_time > t]
         finished.clear()
         outstanding = sum(len(eng.running) + len(eng.waiting)
                           for eng in fleet.engines)
@@ -324,9 +357,11 @@ def run_joint_autoscaled(fleet: Fleet, requests: Sequence[Request],
             len(eng.running)
             + sum(1 for r in eng.waiting if r.ready_time <= t)
             for eng in fleet.engines)
+        n_dec_active = len(fleet._active_idxs())
         d_pre, d_dec = autoscaler.decide(
             t, ttfts, tpots, dwaits, pre_lags, tier.n_active,
-            len(fleet._active_idxs()), prefill_backlog, decode_backlog)
+            n_dec_active, prefill_backlog, decode_backlog,
+            decompress_util=decomp_total / (dt * max(n_dec_active, 1)))
         if d_dec < 0:
             fleet.retire_replica(fleet._active_idxs()[-1])
             budget.release("decode")

@@ -172,6 +172,18 @@ class ServingEngine:
                 self.stats.swap_time += stall
                 self.stats.compute_time += t_pre
                 r.prefilled = True
+            elif (r.kv_decompress_cost > 0
+                  and r.decompress_done_time is None):
+                # compressed disagg handoff: the KV arrives quantized and
+                # is dequantized on THIS replica, charging the compute to
+                # the decode tier.  Dequant streams per landed chunk and
+                # overlaps the transfer tail (mirroring the first-chunk
+                # admission model), so the WHOLE cost is charged once
+                # here — decompress_done_time marks when the replica paid
+                # it, which can precede kv_landed_time
+                self.clock += r.kv_decompress_cost
+                self.stats.decompress_time += r.kv_decompress_cost
+                r.decompress_done_time = self.clock
             self.running.append(r)
 
     def _prefetch_waiting(self) -> None:

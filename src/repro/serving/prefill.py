@@ -82,8 +82,10 @@ class PrefillStats:
     n_prefills: int = 0
     compute_time: float = 0.0        # prefill FLOP time
     swap_time: float = 0.0           # adapter-residency stalls
+    compress_time: float = 0.0       # KV wire-compression (quantize) time
     transfer_time: float = 0.0       # sum of per-request KV handoff times
-    kv_bytes_moved: int = 0
+    kv_bytes_moved: int = 0          # bytes on the wire (post-compression)
+    kv_raw_bytes: int = 0            # bytes produced by prefill
     n_swaps: int = 0
     n_chunks: int = 0                # fabric chunks shipped (disagg)
 
@@ -94,8 +96,10 @@ class PrefillStats:
             out.n_prefills += s.n_prefills
             out.compute_time += s.compute_time
             out.swap_time += s.swap_time
+            out.compress_time += s.compress_time
             out.transfer_time += s.transfer_time
             out.kv_bytes_moved += s.kv_bytes_moved
+            out.kv_raw_bytes += s.kv_raw_bytes
             out.n_swaps += s.n_swaps
             out.n_chunks += s.n_chunks
         return out
@@ -103,6 +107,7 @@ class PrefillStats:
     def add_fabric(self, fs: FabricStats) -> "PrefillStats":
         self.transfer_time += fs.transfer_time
         self.kv_bytes_moved += fs.kv_bytes_moved
+        self.kv_raw_bytes += fs.kv_raw_bytes
         self.n_chunks += fs.n_chunks
         return self
 
@@ -111,8 +116,10 @@ class PrefillStats:
             "n_prefills": self.n_prefills,
             "prefill_compute_s": self.compute_time,
             "prefill_swap_s": self.swap_time,
+            "kv_compress_s": self.compress_time,
             "kv_transfer_s": self.transfer_time,
             "kv_bytes_moved": self.kv_bytes_moved,
+            "kv_raw_bytes": self.kv_raw_bytes,
             "kv_chunks": self.n_chunks,
             "prefill_n_swaps": self.n_swaps,
         }
@@ -160,10 +167,22 @@ class PrefillWorker:
 
     def _handoff(self, req: Request) -> None:
         """Record the produced KV cache on the fabric (never blocks this
-        worker's next prefill); the fabric stamps readiness at resolve."""
+        worker's next prefill); the fabric stamps readiness at resolve.
+
+        With wire compression configured on the fabric, the quantize /
+        projection kernel runs on THIS worker between prefills — the
+        compression cost is serialized on the worker's clock before the
+        handoff is recorded, so a compressed transfer starts later but
+        ships fewer bytes."""
+        nbytes = self.executor.kv_bytes(req)
+        comp = self.fabric.cfg.compression
+        if comp is not None:
+            t_comp = comp.compress_time(nbytes)
+            self.clock += t_comp
+            self.stats.compress_time += t_comp
         req.prefill_done_time = self.clock
         req.prefilled = True
-        self.fabric.request(req, self.clock, self.executor.kv_bytes(req))
+        self.fabric.request(req, self.clock, nbytes)
 
     def step(self) -> bool:
         """Prefill one admitted batch; returns False when drained."""
@@ -208,6 +227,7 @@ class PrefillWorker:
             fs = self.fabric.stats
             self.stats.transfer_time = fs.transfer_time
             self.stats.kv_bytes_moved = fs.kv_bytes_moved
+            self.stats.kv_raw_bytes = fs.kv_raw_bytes
             self.stats.n_chunks = fs.n_chunks
 
 

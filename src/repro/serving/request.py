@@ -31,6 +31,15 @@ class Request:
     transfer_time: float = 0.0       # KV handoff span (prefill -> all landed)
     decode_ready_time: Optional[float] = None
     kv_landed_time: Optional[float] = None
+    # KV wire compression (stamped by the fabric when the handoff is
+    # recorded): raw bytes prefill produced, bytes actually shipped, the
+    # mode, and the decode-side dequantization cost the decode replica pays
+    # at admission (decompress_done_time is set when it does)
+    kv_raw_bytes: int = 0
+    kv_wire_bytes: int = 0
+    kv_compression: Optional[str] = None
+    kv_decompress_cost: float = 0.0
+    decompress_done_time: Optional[float] = None
 
     @property
     def ready_time(self) -> float:
@@ -92,6 +101,7 @@ class ServeStats:
     wall_time: float = 0.0
     swap_time: float = 0.0
     compute_time: float = 0.0
+    decompress_time: float = 0.0     # decode-side KV dequantization
     n_swaps: int = 0
     sum_latency: float = 0.0
     latencies: List[float] = dataclasses.field(default_factory=list)
@@ -142,6 +152,7 @@ class ServeStats:
             out.wall_time = max(out.wall_time, s.wall_time)
             out.swap_time += s.swap_time
             out.compute_time += s.compute_time
+            out.decompress_time += s.decompress_time
             out.n_swaps += s.n_swaps
             out.sum_latency += s.sum_latency
             out.latencies.extend(s.latencies)
@@ -154,6 +165,7 @@ class ServeStats:
             "n_requests": self.n_requests, "n_tokens": self.n_tokens,
             "wall_time_s": self.wall_time, "swap_time_s": self.swap_time,
             "compute_time_s": self.compute_time, "n_swaps": self.n_swaps,
+            "decompress_time_s": self.decompress_time,
             "throughput_rps": self.throughput_rps,
             "throughput_tps": self.throughput_tps,
             "mean_latency_s": self.mean_latency,

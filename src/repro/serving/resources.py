@@ -1,6 +1,7 @@
-"""Unified serving resources: a fixed hardware budget + a shared KV fabric.
+"""Unified serving resources: hardware budget, shared KV fabric, and KV
+wire compression.
 
-Two abstractions the rest of the serving stack draws from instead of owning
+Abstractions the rest of the serving stack draws from instead of owning
 capacity itself:
 
   - :class:`HardwareBudget` — N accelerators total, with per-role footprints
@@ -23,6 +24,13 @@ capacity itself:
     (``decode_ready_time``), while the tail of the transfer overlaps decode
     (``kv_landed_time``).
 
+  - :class:`KVCompressionConfig` — compress-then-serve applied to the
+    handoff itself: prefill workers quantize (int8/int4, per-channel, the
+    Pallas kernels in :mod:`repro.kernels.kv_quant`) or low-rank-project
+    each KV cache before it ships, every raw-token-range chunk crosses
+    the wire at its compressed size, and the decode replica pays a
+    modeled dequantization cost at admission.
+
 Degenerate configurations are exact by construction:
 
   * one worker, ``chunk_bytes == 0`` (whole-KV serial handoff) reproduces
@@ -42,7 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 
 # ---------------------------------------------------------------------------
@@ -119,6 +127,97 @@ class HardwareBudget:
 
 
 # ---------------------------------------------------------------------------
+# KV wire compression
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class KVCompressionConfig:
+    """Compress-then-serve applied to the KV handoff itself.
+
+    The transfer-bound regime PR 3 exposed (slow fabric, long prompts) is
+    exactly where shrinking ``kv_bytes`` on the wire pays: prefill workers
+    quantize (or project) each produced KV cache before enqueueing it on
+    the fabric, and the decode replica dequantizes after the first chunk
+    lands — compute traded for wire bytes, the paper's thesis applied to
+    the interconnect.
+
+    Modes:
+
+      ``int8`` / ``int4`` — per-channel symmetric quantization.  The wire
+        ratios and worst-case error bounds are NOT free parameters: they
+        are measured off the packed artifacts of the Pallas kernels in
+        :mod:`repro.kernels.kv_quant` (values + one f32 scale per channel
+        per 128-token block), and tests/test_kvcomp.py asserts this module
+        and the kernel module agree.
+      ``lowrank`` — keep ``lowrank_ratio`` of the KV channels through a
+        learned projection (the same U/V machinery the compressed adapters
+        use); wire ratio equals the kept fraction, error depends on the
+        trained projection so no static bound is exported.
+
+    Cost model: quantize/dequantize stream the block once (read one side,
+    write the other), so both are HBM-bandwidth bound —
+    ``overhead + (raw + wire) / mem_bw`` — with ``mem_bw`` defaulting to
+    the v5e serving slice's aggregate HBM bandwidth
+    (:class:`~repro.serving.engine.ServingHardware`).  Compression is
+    charged to the *prefill* worker's clock before the handoff is
+    recorded; decompression to the *decode* replica at admission
+    (``Request.decompress_done_time``), which is how the joint autoscaler
+    sees it when trading tiers under a budget.
+    """
+
+    mode: str = "int8"               # int8 | int4 | lowrank
+    lowrank_ratio: float = 0.25      # kept channel fraction (lowrank only)
+    # (de)quant streaming bandwidth; mirrors ServingHardware.hbm_bw (the
+    # v5e slice), kept in sync by tests/test_kvcomp.py
+    mem_bw: float = 4 * 819e9
+    kernel_overhead: float = 20e-6   # per-handoff kernel launch cost, s
+
+    MODES = ("int8", "int4", "lowrank")
+    # mirrors repro.kernels.kv_quant.{WIRE_RATIO, ERROR_BOUND} at the
+    # canonical 128-token block, duplicated so the simulator stays
+    # jax-free; tests/test_kvcomp.py asserts the two stay in sync
+    WIRE_RATIO = {"int8": 33 / 64, "int4": 17 / 64}
+    ERROR_BOUND = {"int8": 1 / 254, "int4": 1 / 14}
+
+    def __post_init__(self):
+        if self.mode not in self.MODES:
+            raise ValueError(f"unknown compression mode {self.mode!r}; "
+                             f"one of {self.MODES}")
+        if not 0.0 < self.lowrank_ratio <= 1.0:
+            raise ValueError("lowrank_ratio must be in (0, 1]")
+        if self.mem_bw <= 0:
+            raise ValueError("mem_bw must be > 0")
+
+    @property
+    def wire_ratio(self) -> float:
+        if self.mode == "lowrank":
+            return self.lowrank_ratio
+        return self.WIRE_RATIO[self.mode]
+
+    @property
+    def error_bound(self) -> Optional[float]:
+        """Worst-case per-channel relative error (None for lowrank)."""
+        return self.ERROR_BOUND.get(self.mode)
+
+    def wire_bytes(self, raw_bytes: int) -> int:
+        if raw_bytes <= 0:
+            return 0
+        return max(1, math.ceil(raw_bytes * self.wire_ratio))
+
+    def compress_time(self, raw_bytes: int) -> float:
+        """Prefill-side quantize/project cost for one KV cache."""
+        if raw_bytes <= 0:
+            return 0.0
+        return (self.kernel_overhead
+                + (raw_bytes + self.wire_bytes(raw_bytes)) / self.mem_bw)
+
+    def decompress_time(self, raw_bytes: int) -> float:
+        """Decode-side dequantize cost (same streaming roofline)."""
+        return self.compress_time(raw_bytes)
+
+
+# ---------------------------------------------------------------------------
 # shared KV fabric
 # ---------------------------------------------------------------------------
 
@@ -138,6 +237,8 @@ class FabricConfig:
     bandwidth: float = 50e9          # aggregate bytes/s prefill -> decode
     latency: float = 200e-6          # per-chunk fixed cost
     chunk_bytes: int = 0             # 0 = whole-KV serial handoff
+    # wire compression; None ships raw KV (bit-exact with the PR-3 fabric)
+    compression: Optional[KVCompressionConfig] = None
 
     def __post_init__(self):
         if self.bandwidth <= 0:
@@ -156,28 +257,35 @@ class FabricStats:
     n_transfers: int = 0
     n_chunks: int = 0
     transfer_time: float = 0.0       # sum of per-request ready->landed spans
-    kv_bytes_moved: int = 0
+    kv_bytes_moved: int = 0          # bytes on the wire (post-compression)
+    kv_raw_bytes: int = 0            # bytes produced by prefill
     busy_time: float = 0.0           # channel occupancy (latency + wire time)
 
 
 class _Transfer:
-    """One in-flight KV handoff (all chunks available at ``ready_at``)."""
+    """One in-flight KV handoff (all chunks available at ``ready_at``).
 
-    __slots__ = ("req", "ready_at", "nbytes", "n_chunks", "chunks_sent")
+    Chunking is over the RAW KV (token ranges — the same 128-token blocks
+    the quantization kernel works on); ``wire_chunks`` holds each chunk's
+    on-the-wire size after compression.  With compression off the wire
+    chunks equal the raw chunk sizes, reproducing the PR-3 arithmetic
+    bit-exactly."""
 
-    def __init__(self, req, ready_at: float, nbytes: int, n_chunks: int):
+    __slots__ = ("req", "ready_at", "nbytes", "raw_bytes", "wire_chunks",
+                 "n_chunks", "chunks_sent")
+
+    def __init__(self, req, ready_at: float, raw_bytes: int,
+                 wire_chunks: List[int]):
         self.req = req
         self.ready_at = ready_at
-        self.nbytes = nbytes
-        self.n_chunks = n_chunks
+        self.raw_bytes = raw_bytes
+        self.wire_chunks = wire_chunks
+        self.nbytes = sum(wire_chunks)
+        self.n_chunks = len(wire_chunks)
         self.chunks_sent = 0
 
-    def next_chunk_bytes(self, chunk_bytes: int) -> int:
-        if self.n_chunks == 1:
-            return self.nbytes
-        if self.chunks_sent < self.n_chunks - 1:
-            return chunk_bytes
-        return self.nbytes - chunk_bytes * (self.n_chunks - 1)
+    def next_chunk_bytes(self) -> int:
+        return self.wire_chunks[self.chunks_sent]
 
 
 class KVFabric:
@@ -203,10 +311,38 @@ class KVFabric:
         return cls(FabricConfig(bandwidth=link.bandwidth,
                                 latency=link.latency, chunk_bytes=0))
 
+    def _wire_chunks(self, nbytes: int) -> List[int]:
+        """Per-chunk wire sizes for a raw KV of `nbytes`.  Chunk boundaries
+        are raw token ranges (compression quantizes each block
+        independently, so a compressed chunk is a *smaller* wire unit —
+        the first chunk lands sooner and every slot in the fair interleave
+        shortens); compression=None ships the raw spans unchanged."""
+        n = self.cfg.n_chunks(nbytes)
+        if n == 1:
+            raw_spans = [nbytes]
+        else:
+            cb = self.cfg.chunk_bytes
+            raw_spans = [cb] * (n - 1) + [nbytes - cb * (n - 1)]
+        comp = self.cfg.compression
+        if comp is None:
+            return raw_spans
+        return [comp.wire_bytes(s) for s in raw_spans]
+
     def request(self, req, ready_at: float, nbytes: int) -> None:
-        """Record a KV handoff; scheduled at the next :meth:`resolve`."""
-        self._pending.append(
-            _Transfer(req, ready_at, nbytes, self.cfg.n_chunks(nbytes)))
+        """Record a KV handoff; scheduled at the next :meth:`resolve`.
+
+        `nbytes` is the RAW KV size prefill produced; with wire
+        compression configured each raw chunk ships at its compressed
+        size and the request is stamped with its decode-side
+        decompression cost (charged by the decode engine at admission)."""
+        comp = self.cfg.compression
+        wire_chunks = self._wire_chunks(nbytes)
+        req.kv_raw_bytes = nbytes
+        req.kv_wire_bytes = sum(wire_chunks)
+        if comp is not None:
+            req.kv_compression = comp.mode
+            req.kv_decompress_cost = comp.decompress_time(nbytes)
+        self._pending.append(_Transfer(req, ready_at, nbytes, wire_chunks))
 
     def resolve(self) -> None:
         """Schedule all recorded transfers' chunks and stamp the requests:
@@ -228,7 +364,7 @@ class KVFabric:
                 i += 1
             tr = min(active, key=lambda x: (x.chunks_sent, x.ready_at,
                                             x.req.rid))
-            size = tr.next_chunk_bytes(self.cfg.chunk_bytes)
+            size = tr.next_chunk_bytes()
             start = max(t, tr.ready_at)
             done = start + self.cfg.latency + size / self.cfg.bandwidth
             self.stats.busy_time += done - start
@@ -243,5 +379,6 @@ class KVFabric:
                 self.stats.n_transfers += 1
                 self.stats.transfer_time += tr.req.transfer_time
                 self.stats.kv_bytes_moved += tr.nbytes
+                self.stats.kv_raw_bytes += tr.raw_bytes
                 active.remove(tr)
         self.free_at = t

@@ -30,6 +30,13 @@ Two orthogonal production extensions on top of the policies:
     shared :class:`~repro.serving.resources.KVFabric` — first chunk landed),
     then placed on decode replicas with the configured policy; decode
     engines admit a request only once enough of its KV has landed.
+  * **Cross-tier adapter prefetch** — with
+    ``FleetConfig.cross_tier_prefetch`` a request entering prefill hints
+    its routed decode replica's :meth:`AdapterCache.prefetch` at prefill
+    ADMISSION time: the adapter's background load overlaps the prefill
+    compute and KV transfer, so it is warm when decode admits the request
+    (hints are low priority — they never evict and never delay a demand
+    load).
   * **Elastic membership** — :meth:`add_replica` / :meth:`retire_replica`
     let an autoscaler grow/shrink the decode tier mid-stream.  Retired
     replicas drain their queue but receive no new work; membership changes
@@ -63,6 +70,11 @@ class FleetConfig:
     # decode placement (the tier itself is passed to Fleet — it owns
     # executors/caches that FleetConfig cannot describe)
     disaggregated: bool = False
+    # cross-tier adapter prefetch: a request entering prefill is a perfect
+    # predictor of the adapter its decode replica needs a few hundred ms
+    # later, so hint that replica's AdapterCache.prefetch at prefill
+    # admission time (low priority: never evicts, never delays demand)
+    cross_tier_prefetch: bool = False
 
 
 @dataclasses.dataclass
@@ -256,6 +268,16 @@ class Fleet:
             self.assignments[r.rid] = i
             if track_load:
                 self._routed_load[i] += self._work_estimate(r)
+            if self.prefill_tier is not None and self.cfg.cross_tier_prefetch:
+                # hint the decode cache as of prefill ADMISSION — the KV
+                # will not land for another prefill + transfer, which is
+                # exactly the head start the background copy engine needs
+                eng = self.engines[i]
+                hint_at = (r.start_time if r.start_time is not None
+                           else r.ready_time)
+                eng.cache.prefetch(
+                    r.adapter_id, eng.executor.adapter_bytes(r.adapter_id),
+                    hint_at)
             self.engines[i].submit([r])
 
     def run(self, max_steps: int = 10_000_000) -> FleetStats:

@@ -173,6 +173,11 @@ def run_elastic_study(model_cfg, mode: str, n_adapters: int,
     both tiers start at their configured sizes and the
     :class:`~repro.serving.autoscaler.JointAutoscaler` trades prefill
     workers against decode replicas under the fixed accelerator pool.
+    KV wire compression is configured on the fabric —
+    ``prefill_cfg=PrefillConfig(fabric=FabricConfig(...,
+    compression=KVCompressionConfig(...)))`` — and threads through the
+    whole cell: workers compress, chunks ship small, decode replicas pay
+    dequantization, and the joint autoscaler sees that load.
     Returns merged :class:`FleetStats` (``stats.autoscaler`` holds the
     decision history when autoscaled)."""
     hw = hw or ServingHardware()

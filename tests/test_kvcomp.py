@@ -1,0 +1,411 @@
+"""Compressed-KV wire transfer: Pallas quant kernels vs JAX oracles,
+fabric wire accounting, decode-side decompression, autoscaler coupling,
+cross-tier prefetch, and the transfer-bound acceptance sweep."""
+import pytest
+
+from repro.serving.adapter_cache import AdapterCache, CacheConfig, DMAModel
+from repro.serving.autoscaler import (JointAutoscaler, JointAutoscalerConfig,
+                                      SLOConfig)
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.prefill import PrefillConfig, PrefillTier, PrefillWorker
+from repro.serving.request import Request
+from repro.serving.resources import (BudgetConfig, FabricConfig,
+                                     HardwareBudget, KVCompressionConfig)
+from repro.serving.router import Fleet, FleetConfig
+from repro.serving.scheduler import SchedulerConfig
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp                                       # noqa: E402
+import numpy as np                                            # noqa: E402
+
+from repro.kernels import kv_quant as KQ                      # noqa: E402
+from repro.kernels.ref import kv_dequant_ref, kv_quant_ref    # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle + round-trip properties
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("T,C", [(128, 256), (64, 128), (32, 384)])
+def test_kv_quant_kernel_matches_ref(bits, T, C):
+    x = jax.random.normal(jax.random.PRNGKey(0), (T, C), jnp.float32)
+    packed, scales = KQ.kv_quantize(x, bits=bits)
+    q_ref, s_ref = kv_quant_ref(x, bits)
+    np.testing.assert_allclose(np.asarray(scales), np.asarray(s_ref),
+                               rtol=1e-6)
+    out = KQ.kv_dequantize(packed, scales, bits=bits)
+    ref = kv_dequant_ref(q_ref, s_ref)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_roundtrip_error_bound(bits):
+    """|dequant(quant(x)) - x| <= error_bound * per-channel absmax — the
+    bound the serving config exports."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (128, 256), jnp.float32)
+    packed, scales = KQ.kv_quantize(x, bits=bits)
+    out = KQ.kv_dequantize(packed, scales, bits=bits)
+    absmax = jnp.max(jnp.abs(x), axis=0, keepdims=True)
+    err = jnp.max(jnp.abs(out - x) / absmax)
+    assert float(err) <= KQ.ERROR_BOUND[bits] * (1 + 1e-5)
+
+
+def test_int4_monotonically_worse_than_int8():
+    x = jax.random.normal(jax.random.PRNGKey(2), (128, 256), jnp.float32)
+    errs = {}
+    for bits in (8, 4):
+        packed, scales = KQ.kv_quantize(x, bits=bits)
+        out = KQ.kv_dequantize(packed, scales, bits=bits)
+        errs[bits] = (float(jnp.max(jnp.abs(out - x))),
+                      float(jnp.mean((out - x) ** 2)))
+    assert errs[4][0] > errs[8][0]       # max error strictly worse
+    assert errs[4][1] > errs[8][1]       # and mean-squared error too
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_roundtrip_exact_on_already_quantized_grid(bits):
+    """x on an exactly representable quantization grid (power-of-two scale)
+    round-trips bit-exactly: dequant(quant(x)) == x."""
+    qmax = KQ.QMAX[bits]
+    rng = np.random.default_rng(3)
+    k = rng.integers(-qmax, qmax + 1, size=(128, 128)).astype(np.float32)
+    k[0, :] = qmax                       # pin the absmax so scale = 1/32
+    x = jnp.asarray(k / 32.0)
+    packed, scales = KQ.kv_quantize(x, bits=bits)
+    out = KQ.kv_dequantize(packed, scales, bits=bits)
+    assert jnp.array_equal(out, x)
+
+
+def test_quant_validation():
+    x = jnp.zeros((31, 128), jnp.float32)
+    with pytest.raises(ValueError):
+        KQ.kv_quantize(x, bits=4)        # odd token count cannot pack
+    with pytest.raises(ValueError):
+        KQ.kv_quantize(x, bits=2)
+    # all-zero channels quantize to zero with a finite scale
+    packed, scales = KQ.kv_quantize(jnp.zeros((32, 128)), bits=8)
+    assert float(jnp.max(jnp.abs(KQ.kv_dequantize(packed, scales)))) == 0.0
+
+
+def test_sim_constants_match_measured_kernel_artifacts():
+    """The serving simulator's wire ratios / error bounds ARE the kernel's:
+    measured off the packed artifacts, not tuned by hand."""
+    for bits, mode in ((8, "int8"), (4, "int4")):
+        assert KQ.measured_wire_ratio(bits) == \
+            KVCompressionConfig.WIRE_RATIO[mode]
+        assert KQ.WIRE_RATIO[bits] == KVCompressionConfig.WIRE_RATIO[mode]
+        assert KQ.ERROR_BOUND[bits] == KVCompressionConfig.ERROR_BOUND[mode]
+
+
+def test_default_mem_bw_matches_serving_hardware():
+    """The (de)quant streaming bandwidth defaults to the same v5e slice
+    HBM bandwidth the decode cost model uses — retuning one without the
+    other would silently skew the compression trade."""
+    from repro.serving.engine import ServingHardware
+
+    assert KVCompressionConfig().mem_bw == ServingHardware().hbm_bw
+
+
+# ---------------------------------------------------------------------------
+# compression config + fabric wire accounting
+# ---------------------------------------------------------------------------
+
+
+def test_compression_config_validation():
+    with pytest.raises(ValueError):
+        KVCompressionConfig(mode="fp8")
+    with pytest.raises(ValueError):
+        KVCompressionConfig(mode="lowrank", lowrank_ratio=0.0)
+    with pytest.raises(ValueError):
+        KVCompressionConfig(mem_bw=0.0)
+    c = KVCompressionConfig(mode="lowrank", lowrank_ratio=0.5)
+    assert c.wire_ratio == 0.5 and c.error_bound is None
+
+
+def test_compression_cost_arithmetic():
+    c = KVCompressionConfig(mode="int8", mem_bw=1000.0, kernel_overhead=0.1)
+    assert c.wire_bytes(1000) == 516     # ceil(1000 * 33/64)
+    assert c.compress_time(1000) == pytest.approx(0.1 + 1516 / 1000.0)
+    assert c.decompress_time(1000) == c.compress_time(1000)
+    assert c.wire_bytes(0) == 0 and c.compress_time(0) == 0.0
+
+
+class FixedCostExecutor:
+    """Hand-computable executor: prefill 1s, decode step 0.5s, KV 1000 B."""
+
+    def __init__(self, prefill=1.0, decode=0.5, kv=1000):
+        self._prefill, self._decode, self._kv = prefill, decode, kv
+
+    def adapter_bytes(self, aid):
+        return 1
+
+    def shared_bytes(self):
+        return 0
+
+    def decode_step_time(self, batch):
+        return self._decode if batch else 0.0
+
+    def prefill_time(self, req):
+        return self._prefill
+
+    def kv_bytes(self, req):
+        return self._kv
+
+
+def _free_cache():
+    return AdapterCache(CacheConfig(1e9, DMAModel(bandwidth=1e30,
+                                                  latency=0.0)))
+
+
+def _worker(cfg, kv=1000):
+    w = PrefillWorker(cfg, FixedCostExecutor(kv=kv))
+    w.cache = _free_cache()
+    return w
+
+
+def _reqs(adapters, arrivals=None, new_tokens=2):
+    arrivals = arrivals or [0.0] * len(adapters)
+    return [Request(rid=i, adapter_id=a, prompt_len=8,
+                    max_new_tokens=new_tokens, arrival_time=t)
+            for i, (a, t) in enumerate(zip(adapters, arrivals))]
+
+
+def test_compressed_handoff_shrinks_wire_and_charges_prefill():
+    """1000-B KV, int8 (mem_bw=1000, overhead=0.1): compress takes
+    0.1 + 1516/1000 = 1.616s on the worker clock, 516 wire bytes ship in
+    5.16s at 100 B/s -> decode-ready at 1 + 1.616 + 5.16 = 7.776."""
+    comp = KVCompressionConfig(mode="int8", mem_bw=1000.0,
+                               kernel_overhead=0.1)
+    fab = FabricConfig(bandwidth=100.0, latency=0.0, chunk_bytes=0,
+                       compression=comp)
+    w = _worker(PrefillConfig(n_workers=1, fabric=fab))
+    reqs = _reqs([0])
+    w.submit(reqs)
+    w.drain()
+    r = reqs[0]
+    assert r.prefill_done_time == pytest.approx(2.616)
+    assert r.kv_raw_bytes == 1000 and r.kv_wire_bytes == 516
+    assert r.kv_compression == "int8"
+    assert r.kv_decompress_cost == pytest.approx(1.616)
+    assert r.decode_ready_time == pytest.approx(2.616 + 5.16)
+    assert w.stats.compress_time == pytest.approx(1.616)
+    assert w.stats.kv_bytes_moved == 516
+    assert w.stats.kv_raw_bytes == 1000
+
+
+def test_compressed_chunks_land_first_chunk_sooner():
+    """Chunking is over raw token ranges: a 1000-B KV in 400-B raw chunks
+    ships 207/207/104-wire-byte chunks under int8 — the first chunk (and
+    every fair-interleave slot) shrinks by the wire ratio."""
+    comp = KVCompressionConfig(mode="int8", mem_bw=1e30, kernel_overhead=0.0)
+    fab_c = FabricConfig(bandwidth=100.0, latency=0.0, chunk_bytes=400,
+                         compression=comp)
+    fab_r = FabricConfig(bandwidth=100.0, latency=0.0, chunk_bytes=400)
+    out = {}
+    for name, fab in (("int8", fab_c), ("raw", fab_r)):
+        w = _worker(PrefillConfig(n_workers=1, fabric=fab))
+        reqs = _reqs([0])
+        w.submit(reqs)
+        w.drain()
+        out[name] = reqs[0]
+    # raw: chunks 400/400/200 -> first at 1+4.0; int8 per-chunk wire:
+    # ceil(400*33/64)=207 (x2), ceil(200*33/64)=104
+    assert out["raw"].decode_ready_time == pytest.approx(5.0)
+    assert out["int8"].decode_ready_time == pytest.approx(1.0 + 2.07)
+    assert out["int8"].kv_wire_bytes == 207 + 207 + 104
+    assert out["int8"].kv_landed_time < out["raw"].kv_landed_time
+
+
+def test_compression_none_reproduces_pr3_chunk_timings_bit_exactly():
+    """The PR-3 chunked-streaming arithmetic is untouched when compression
+    is off: 100 B in 30-B chunks over 100 B/s with 0.1s per-chunk latency
+    -> first chunk at 1.4, last at 2.4 (same numbers as PR 3's test)."""
+    for fab in (FabricConfig(bandwidth=100.0, latency=0.1, chunk_bytes=30),
+                FabricConfig(bandwidth=100.0, latency=0.1, chunk_bytes=30,
+                             compression=None)):
+        w = _worker(PrefillConfig(n_workers=1, fabric=fab), kv=100)
+        reqs = _reqs([0])
+        w.submit(reqs)
+        w.drain()
+        r = reqs[0]
+        assert r.prefill_done_time == 1.0
+        assert r.decode_ready_time == pytest.approx(1.0 + 0.1 + 0.3)
+        assert r.kv_landed_time == pytest.approx(1.0 + 4 * 0.1 + 1.0)
+        assert r.transfer_time == pytest.approx(1.4)
+        assert r.kv_raw_bytes == r.kv_wire_bytes == 100
+        assert r.kv_decompress_cost == 0.0 and r.kv_compression is None
+        assert w.stats.n_chunks == 4
+        assert w.stats.compress_time == 0.0
+
+
+# ---------------------------------------------------------------------------
+# decode-side decompression + autoscaler coupling
+# ---------------------------------------------------------------------------
+
+
+def test_decode_engine_charges_decompression_at_admission():
+    eng = ServingEngine(EngineConfig(scheduler=SchedulerConfig(max_batch=4),
+                                     adapter_budget_bytes=1e9),
+                        FixedCostExecutor())
+    eng.cache = _free_cache()
+    r = Request(rid=0, adapter_id=0, prompt_len=8, max_new_tokens=2,
+                arrival_time=0.0)
+    r.prefilled = True
+    r.decode_ready_time = 1.0
+    r.kv_decompress_cost = 0.5
+    eng.submit([r])
+    stats = eng.run()
+    # clock jumps to KV-ready (1.0), dequant charges 0.5, then two 0.5s
+    # decode steps: first token at 2.0, finish at 2.5
+    assert r.decompress_done_time == pytest.approx(1.5)
+    assert r.first_token_time == pytest.approx(2.0)
+    assert stats.decompress_time == pytest.approx(0.5)
+    # raw requests pay nothing
+    r2 = Request(rid=1, adapter_id=0, prompt_len=8, max_new_tokens=1)
+    r2.prefilled = True
+    r2.decode_ready_time = 10.0
+    eng.submit([r2])
+    eng.run()
+    assert r2.decompress_done_time is None
+    assert stats.decompress_time == pytest.approx(0.5)
+
+
+def test_joint_autoscaler_decompress_util_vetoes_decode_cold():
+    """A decode tier spending real time dequantizing compressed KV is never
+    classified cold — the prefill-hot trade that would rob it must not
+    fire, but it does once decompression load is off."""
+    def fresh():
+        budget = HardwareBudget(BudgetConfig(total_accelerators=4))
+        budget.allocate("prefill")
+        for _ in range(3):
+            budget.allocate("decode")
+        return JointAutoscaler(JointAutoscalerConfig(cooldown_intervals=0),
+                               SLOConfig(ttft_p95=1.0), budget)
+
+    args = dict(n_prefill=1, n_decode=3, prefill_backlog=9, decode_backlog=1)
+    a = fresh()
+    assert a.decide(1.0, [0.6] * 20, [], [0.05] * 20, [0.9] * 20,
+                    decompress_util=0.5, **args) == (0, 0)
+    assert a.history[-1].decompress_util == pytest.approx(0.5)
+    a2 = fresh()
+    assert a2.decide(1.0, [0.6] * 20, [], [0.05] * 20, [0.9] * 20,
+                     decompress_util=0.0, **args) == (1, -1)
+
+
+# ---------------------------------------------------------------------------
+# cross-tier adapter prefetch
+# ---------------------------------------------------------------------------
+
+
+def _disagg_fleet(cross_tier_prefetch, budget_bytes=3.0):
+    """2-decode-replica disagg fleet; decode caches fit `budget_bytes`
+    1-byte adapters each."""
+    pcfg = PrefillConfig(n_workers=1)
+    tier = PrefillTier(pcfg, [_worker(pcfg)])
+    engines = []
+    for _ in range(2):
+        eng = ServingEngine(
+            EngineConfig(scheduler=SchedulerConfig(max_batch=4),
+                         adapter_budget_bytes=budget_bytes),
+            FixedCostExecutor())
+        eng.cache = AdapterCache(CacheConfig(budget_bytes,
+                                             DMAModel(bandwidth=1.0,
+                                                      latency=0.0)))
+        engines.append(eng)
+    cfg = FleetConfig(n_replicas=2, policy="round_robin", disaggregated=True,
+                      cross_tier_prefetch=cross_tier_prefetch)
+    return Fleet(cfg, engines, prefill_tier=tier), engines
+
+
+def test_cross_tier_prefetch_hints_decode_caches():
+    """Hinted runs warm the decode replica's cache from prefill-admission
+    knowledge: n_prefetches rises and the hinted adapter is resident (and
+    still usable) by the time its KV lands."""
+    fleet_off, eng_off = _disagg_fleet(False)
+    fleet_on, eng_on = _disagg_fleet(True)
+    reqs_a = _reqs([0, 1, 2, 3])
+    reqs_b = _reqs([0, 1, 2, 3])
+    fleet_off.submit(reqs_a)
+    fleet_on.submit(reqs_b)
+    assert sum(e.cache.n_prefetches for e in eng_off) == 0
+    assert sum(e.cache.n_prefetches for e in eng_on) > 0
+    # the hint is placed at prefill admission, a full prefill + transfer
+    # ahead of the KV landing
+    for r in reqs_b:
+        assert eng_on[r.replica].cache.is_resident(r.adapter_id)
+    fleet_off.run()
+    fleet_on.run()
+    # the warm cache turns the admission-time demand DMA stall into a
+    # background load that completed during prefill+transfer: first tokens
+    # come strictly sooner, never later
+    on = [r.first_token_time for r in reqs_b]
+    off = [r.first_token_time for r in reqs_a]
+    assert all(a <= b for a, b in zip(on, off))
+    assert sum(on) < sum(off)
+
+
+def test_cross_tier_prefetch_never_evicts_demand_entries():
+    fleet, engines = _disagg_fleet(True, budget_bytes=2.0)
+    eng = engines[0]
+    # two demand adapters fill the cache
+    eng.cache.ensure(100, 1, 0.0)
+    eng.cache.ensure(101, 1, 0.0)
+    before = set(eng.cache.resident_ids)
+    fleet.submit(_reqs([7, 8]))          # hints would need eviction: refused
+    assert eng.cache.resident_ids == before
+    assert eng.cache.n_prefetches == 0
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the transfer-bound sweep
+# ---------------------------------------------------------------------------
+
+
+def test_compressed_streaming_lowers_p95_ttft_when_transfer_bound():
+    """On the 2 GB/s fabric sweep, every quantized mode strictly lowers p95
+    TTFT vs raw chunked streaming (and raw serial), while moving the
+    kernel-measured fraction of the bytes."""
+    from benchmarks.kv_compression import (CHUNK, compression_cell,
+                                           transfer_bound_workload)
+    from repro.configs import get_config
+
+    cfg = get_config("mistral-7b")
+    reqs = transfer_bound_workload(alpha=1.0)
+    serial = compression_cell(cfg, reqs, 2e9, None, chunk_bytes=0)
+    raw = compression_cell(cfg, reqs, 2e9, None)
+    int8 = compression_cell(cfg, reqs, 2e9, KVCompressionConfig(mode="int8"))
+    int4 = compression_cell(cfg, reqs, 2e9, KVCompressionConfig(mode="int4"))
+    p95 = {name: s.total.ttft_pct(95)
+           for name, s in [("serial", serial), ("raw", raw),
+                           ("int8", int8), ("int4", int4)]}
+    assert p95["int8"] < p95["raw"] < p95["serial"], p95
+    assert p95["int4"] < p95["int8"], p95
+    # wire accounting: same raw bytes produced, kernel-measured fraction
+    # moved (per-chunk ceil rounds each 16 MB chunk up by at most 1 byte)
+    d_raw, d8 = raw.to_dict(), int8.to_dict()
+    assert d8["kv_raw_bytes"] == d_raw["kv_raw_bytes"]
+    assert d_raw["kv_bytes_moved"] == d_raw["kv_raw_bytes"]
+    ratio = d8["kv_bytes_moved"] / d8["kv_raw_bytes"]
+    assert ratio == pytest.approx(KVCompressionConfig.WIRE_RATIO["int8"],
+                                  rel=1e-6)
+    assert CHUNK == 1 << 24
+    # decode replicas actually paid for dequantization
+    assert d8["decompress_time_s"] > 0.0
+
+
+def test_parity_cell_bit_exact_with_pr3_joint_baseline():
+    """compression=None reproduces PR 3's BENCH_joint static3x3 cell."""
+    import json
+    import pathlib
+    from benchmarks.kv_compression import parity_cell
+    from repro.configs import get_config
+
+    stats = parity_cell(get_config("mistral-7b"))
+    baseline_path = (pathlib.Path(__file__).parent.parent
+                     / "benchmarks" / "baselines" / "BENCH_joint.json")
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    assert stats.total.throughput_rps == pytest.approx(
+        baseline["joint_zipf1.0_b6_fab50g_static3x3"]["rps"], rel=1e-12)
