@@ -1,0 +1,206 @@
+"""Adaptive per-transfer KV wire compression: burstiness x bandwidth.
+
+PR 4's wire compression is a static per-fabric mode: an idle fabric pays
+quantization error and (de)quant compute for nothing, and a saturated one
+cannot reach past its configured mode.  This study sweeps the
+:class:`~repro.serving.resources.AdaptiveCompressionPolicy` — the fabric
+picks raw / int8 / int4 per transfer from live channel backlog with
+hysteresis — against every static mode on the same cells:
+
+1. **Burstiness** — gamma-burst (CV=4) vs Poisson arrivals at the same
+   rate; bursts are where a static mode is wrong twice (raw during the
+   burst, quantized during the lull).
+2. **Bandwidth** — 2 GB/s (transfer-bound, the acceptance regime) and, in
+   the full sweep, 8 GB/s (the wire is roomy and raw is fine).
+
+Acceptance on the 2 GB/s bursty cells (asserted in
+tests/test_adaptive.py): the adaptive policy's p95 TTFT <= every static
+mode's (strictly below raw), while its quantized wire volume stays
+strictly below always-int4's — the ramp and lulls ship raw.
+
+Two grounding cells ride along:
+
+* ``parity_rawlock`` — the same cell with the adaptive ladder locked at
+  ``("raw",)``: must reproduce the static ``compression=None`` fabric
+  (and PR 4's ``kvcomp_*_raw`` baseline cell) bit-exactly, proving the
+  policy is inert until it acts.
+* ``joint_axis`` — a jointly autoscaled budget-6 cell where the fabric
+  starts ceiling-locked at raw and the
+  :class:`~repro.serving.autoscaler.JointAutoscaler` raises the mode
+  ceiling (compression axis) before trading replicas away from a cold
+  tier; vs the same cell raw-locked.
+
+CSV columns: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import List, Optional
+
+from repro.configs import get_config
+from repro.serving.autoscaler import JointAutoscalerConfig, SLOConfig
+from repro.serving.prefill import PrefillConfig
+from repro.serving.request import Request
+from repro.serving.resources import (AdaptiveCompressionConfig, BudgetConfig,
+                                     FabricConfig, KVCompressionConfig)
+from repro.serving.router import FleetConfig
+from repro.serving.simulator import run_elastic_study
+from repro.serving.workload import WorkloadSpec, make_workload
+
+try:
+    from .common import csv_row
+    from .joint_budget import static_split_cell
+    from .kv_compression import CHUNK
+except ImportError:                      # run as a script, not a module
+    from common import csv_row
+    from joint_budget import static_split_cell
+    from kv_compression import CHUNK
+
+N_ADAPTERS = 256
+
+STATIC_MODES = [
+    ("raw", None),
+    ("int8", KVCompressionConfig(mode="int8")),
+    ("int4", KVCompressionConfig(mode="int4")),
+]
+
+
+def adaptive_workload(burst_cv: float, alpha: float = 1.0, seed: int = 0,
+                      n_requests: int = 300) -> List[Request]:
+    """Prompt-heavy 256-token stream at 150 req/s; ``burst_cv > 1`` makes
+    it gamma-bursty (the CV=4 case is PR 4's transfer-bound workload
+    bit-for-bit, keeping the raw cells comparable with BENCH_kvcomp)."""
+    return make_workload(WorkloadSpec(
+        n_requests=n_requests, n_adapters=N_ADAPTERS,
+        popularity="uniform" if alpha == 0 else "zipf", zipf_alpha=alpha,
+        arrival="poisson" if burst_cv <= 1 else "gamma",
+        arrival_rate=150.0, burst_cv=burst_cv,
+        prompt_len_mean=256, prompt_len_std=32, new_tokens=32, seed=seed))
+
+
+def adaptive_cell(cfg, requests: List[Request], bandwidth: float,
+                  adaptive: Optional[AdaptiveCompressionConfig] = None,
+                  compression: Optional[KVCompressionConfig] = None,
+                  n_prefill: int = 3, n_decode: int = 3):
+    """One fixed-split disaggregated cell (same shape as the PR-4 study)."""
+    fabric = FabricConfig(bandwidth=bandwidth, chunk_bytes=CHUNK,
+                          compression=compression, adaptive=adaptive)
+    return static_split_cell(cfg, requests, n_prefill, n_decode,
+                             fabric=fabric)
+
+
+def joint_axis_cell(cfg, requests: List[Request], bandwidth: float,
+                    raw_locked: bool = False, total_accels: int = 6,
+                    slo_ttft: float = 0.4):
+    """Jointly autoscaled cell whose fabric starts ceiling-locked at raw;
+    the autoscaler's compression axis must open the ladder under wire
+    pressure before any replica trade (``raw_locked=True`` removes the
+    ladder entirely, leaving only trades)."""
+    adaptive = (AdaptiveCompressionConfig(modes=("raw",)) if raw_locked
+                else AdaptiveCompressionConfig(initial_ceiling=0))
+    fab = FabricConfig(bandwidth=bandwidth, chunk_bytes=CHUNK,
+                       adaptive=adaptive)
+    return run_elastic_study(
+        cfg, "jd", N_ADAPTERS, [dataclasses.replace(r) for r in requests],
+        FleetConfig(n_replicas=2, policy="cluster_affinity"),
+        prefill_cfg=PrefillConfig(n_workers=2, fabric=fab),
+        slo=SLOConfig(ttft_p95=slo_ttft),
+        budget_cfg=BudgetConfig(total_accelerators=total_accels),
+        joint_cfg=JointAutoscalerConfig(decision_interval=0.05,
+                                        cooldown_intervals=0))
+
+
+def quantized_wire_bytes(stats_dict) -> int:
+    """Wire bytes shipped under any quantized mode (raw excluded)."""
+    by_mode = stats_dict.get("kv_wire_bytes_by_mode", {})
+    return sum(v for k, v in by_mode.items() if k != "raw")
+
+
+def main(quick: bool = True, json_path: Optional[str] = None):
+    cfg = get_config("mistral-7b")
+    bursts = [("bursty", 4.0)] if quick else [("steady", 1.0),
+                                              ("bursty", 4.0)]
+    bandwidths = [("bw2g", 2e9)] if quick else [("bw2g", 2e9),
+                                                ("bw8g", 8e9)]
+    rows = []
+    metrics = {}
+
+    def record(name, stats, dt, extra=""):
+        d = stats.to_dict()
+        by_mode = d.get("kv_wire_bytes_by_mode", {})
+        mix = ",".join(f"{k}:{v / 1e6:.0f}MB"
+                       for k, v in sorted(by_mode.items()))
+        derived = (f"rps={d['throughput_rps']:.2f};"
+                   f"ttft_p95={d['ttft_p95_s'] * 1e3:.1f}ms;"
+                   f"qwire={quantized_wire_bytes(d) / 1e6:.0f}MB;"
+                   f"mix={mix};switches={d.get('kv_mode_switches', 0)}")
+        if extra:
+            derived += ";" + extra
+        rows.append(csv_row(name, dt, derived))
+        metrics[name] = {"rps": d["throughput_rps"]}
+        return d
+
+    for burst_name, burst_cv in bursts:
+        reqs = adaptive_workload(burst_cv)
+        for bw_name, bw in bandwidths:
+            static = {}
+            for mode_name, comp in STATIC_MODES:
+                t0 = time.perf_counter()
+                stats = adaptive_cell(cfg, reqs, bw, compression=comp)
+                static[mode_name] = record(
+                    f"adaptive_{burst_name}_{bw_name}_{mode_name}", stats,
+                    (time.perf_counter() - t0) * 1e6)
+            t0 = time.perf_counter()
+            stats = adaptive_cell(cfg, reqs, bw,
+                                  adaptive=AdaptiveCompressionConfig())
+            best_static = min(s["ttft_p95_s"] for s in static.values())
+            lt_int4 = (quantized_wire_bytes(stats.to_dict())
+                       < quantized_wire_bytes(static["int4"]))
+            record(
+                f"adaptive_{burst_name}_{bw_name}_adaptive", stats,
+                (time.perf_counter() - t0) * 1e6,
+                extra=(f"beats_statics="
+                       f"{stats.total.ttft_pct(95) <= best_static};"
+                       f"lt_int4_qwire={lt_int4}"))
+
+    # parity: the raw-locked ladder must reproduce compression=None bit-
+    # exactly — compared against the sweep's own raw static cell (same
+    # deterministic workload), which also pins PR 4's kvcomp raw baseline
+    reqs = adaptive_workload(4.0)
+    t0 = time.perf_counter()
+    locked = adaptive_cell(cfg, reqs, 2e9,
+                           adaptive=AdaptiveCompressionConfig(
+                               modes=("raw",)))
+    none_rps = metrics["adaptive_bursty_bw2g_raw"]["rps"]
+    record("adaptive_parity_rawlock_bw2g", locked,
+           (time.perf_counter() - t0) * 1e6,
+           extra=f"bit_exact_vs_none={locked.total.throughput_rps == none_rps}")
+
+    # the joint autoscaler's compression axis vs the same cell raw-locked
+    t0 = time.perf_counter()
+    axis = joint_axis_cell(cfg, reqs, 2e9)
+    n_esc = sum(1 for h in axis.autoscaler if h.d_comp > 0)
+    record("adaptive_joint_axis_b6_bw2g", axis,
+           (time.perf_counter() - t0) * 1e6, extra=f"ceiling_raises={n_esc}")
+    t0 = time.perf_counter()
+    record("adaptive_joint_rawlock_b6_bw2g",
+           joint_axis_cell(cfg, reqs, 2e9, raw_locked=True),
+           (time.perf_counter() - t0) * 1e6)
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep for CI smoke")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write deterministic metrics as JSON")
+    args = ap.parse_args()
+    print("\n".join(main(quick=args.quick, json_path=args.json)))

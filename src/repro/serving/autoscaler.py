@@ -35,17 +35,27 @@ reports that load as a window utilization fraction and the policy refuses
 to classify a decode tier cold while it exceeds
 ``decompress_cold_util`` — wire compression must not trick the trader
 into robbing the tier that is paying for it.
+
+With an *adaptive* fabric policy
+(:class:`~repro.serving.resources.AdaptiveCompressionPolicy`) the joint
+autoscaler gains a third axis: the policy's mode ceiling.  When the
+prefill tier is hot, the pool is exhausted, and the fabric horizon
+(``fabric_lag_s``) shows the wire is actually the pressure, the policy's
+ceiling is raised — trading quantization error for bytes — *before* the
+trader robs a cold decode tier of a replica; in quiet windows the ceiling
+relaxes back so an idle fabric ships raw.  Both moves are recorded in
+:class:`JointScaleDecision` (``d_comp`` / ``comp_ceiling``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .prefill import PrefillWorker
 from .request import Request
-from .resources import HardwareBudget
+from .resources import AdaptiveCompressionPolicy, HardwareBudget
 from .router import Fleet, FleetStats
 from .engine import ServingEngine
 
@@ -144,6 +154,15 @@ class JointAutoscalerConfig:
     # retiring a replica would re-concentrate that dequantization load on
     # the survivors even when per-request decode waits look comfortable
     decompress_cold_util: float = 0.25
+    # adaptive-compression axis (needs a bound AdaptiveCompressionPolicy):
+    # raise the fabric's mode ceiling when prefill is hot, the pool is
+    # exhausted, and the fabric's resolved horizon extends this far past
+    # the window end (the wire, not prefill compute, is the pressure);
+    # relax the ceiling in windows where the horizon is below the relax
+    # bound and nothing is hot — but never below the ceiling the policy
+    # was bound with (the autoscaler only takes back headroom it granted)
+    comp_escalate_lag_s: float = 0.05
+    comp_relax_lag_s: float = 0.01
 
 
 @dataclasses.dataclass
@@ -161,6 +180,9 @@ class JointScaleDecision:
     d_prefill: int
     d_decode: int
     decompress_util: float = 0.0     # decode-tier KV-dequant utilization
+    d_comp: int = 0                  # mode-ceiling delta (+1 raise, -1 relax)
+    comp_ceiling: Optional[str] = None   # ceiling mode after this decision
+    fabric_lag_s: float = 0.0        # fabric horizon past the window end
 
 
 class JointAutoscaler:
@@ -175,12 +197,44 @@ class JointAutoscaler:
     """
 
     def __init__(self, cfg: JointAutoscalerConfig, slo: SLOConfig,
-                 budget: HardwareBudget):
+                 budget: HardwareBudget,
+                 comp_policy: Optional[AdaptiveCompressionPolicy] = None):
+        need = (cfg.min_prefill * budget.cfg.cost("prefill")
+                + cfg.min_decode * budget.cfg.cost("decode"))
+        if need > budget.cfg.total_accelerators:
+            raise ValueError(
+                f"budget too small for the tier floors: min_prefill="
+                f"{cfg.min_prefill} x {budget.cfg.cost('prefill')} accels + "
+                f"min_decode={cfg.min_decode} x "
+                f"{budget.cfg.cost('decode')} accels needs {need}, pool has "
+                f"{budget.cfg.total_accelerators}")
         self.cfg = cfg
         self.slo = slo
         self.budget = budget
+        self.comp_policy = None
+        self._comp_floor = 0
+        if comp_policy is not None:
+            self.bind_compression(comp_policy)
         self.history: List[JointScaleDecision] = []
         self._cooldown = 0
+
+    def bind_compression(self, policy: AdaptiveCompressionPolicy) -> None:
+        """Attach the fabric's adaptive policy as the compression axis.
+
+        The ceiling at bind time becomes this autoscaler's relax floor: it
+        only lowers a ceiling it previously raised, so a fabric configured
+        to own its full ladder (``initial_ceiling=None``) is never quietly
+        ratcheted down to raw by warm-up windows."""
+        self.comp_policy = policy
+        self._comp_floor = policy.ceiling
+
+    def _escalate(self, fabric_lag_s: float) -> bool:
+        """Raise the bound policy's mode ceiling when the wire (not
+        compute) is the pressure — the free compute-for-bytes lever tried
+        before any replica trade."""
+        return (self.comp_policy is not None
+                and fabric_lag_s > self.cfg.comp_escalate_lag_s
+                and self.comp_policy.raise_ceiling())
 
     @staticmethod
     def _p95(xs: Sequence[float]) -> float:
@@ -196,13 +250,20 @@ class JointAutoscaler:
                tpots: Sequence[float], decode_waits: Sequence[float],
                prefill_lags: Sequence[float], n_prefill: int, n_decode: int,
                prefill_backlog: int, decode_backlog: int,
-               decompress_util: float = 0.0) -> Tuple[int, int]:
+               decompress_util: float = 0.0,
+               fabric_lag_s: float = 0.0) -> Tuple[int, int]:
         """(prefill delta, decode delta) for this window, each in -1/0/+1.
 
         ``decompress_util`` is the decode tier's window-fraction spent
         dequantizing compressed KV handoffs (0 when the fabric ships raw
         KV); it vetoes the cold classification — see
-        :attr:`JointAutoscalerConfig.decompress_cold_util`."""
+        :attr:`JointAutoscalerConfig.decompress_cold_util`.
+
+        ``fabric_lag_s`` is how far the KV fabric's resolved horizon
+        extends past the window end — the wire-saturation signal that
+        gates the compression axis: a bound adaptive policy's ceiling is
+        raised (instead of a trade) only when the wire is actually the
+        pressure, and relaxed only in windows where it is quiet."""
         cfg = self.cfg
         ttft_p95 = self._p95(ttfts)
         tpot_p95 = self._p95(tpots)
@@ -227,7 +288,7 @@ class JointAutoscaler:
                     and decode_backlog <= n_decode
                     and decompress_util < cfg.decompress_cold_util)
 
-        d_pre = d_dec = 0
+        d_pre = d_dec = d_comp = 0
         if self._cooldown > 0:
             self._cooldown -= 1
         elif pre_hot and dec_hot:
@@ -246,9 +307,18 @@ class JointAutoscaler:
                     else:
                         d_dec = 1
                     break
+            else:
+                # nothing allocatable and no tier may be robbed; shrinking
+                # wire bytes is the one lever that helps both tiers
+                if self._escalate(fabric_lag_s):
+                    d_comp = 1
         elif pre_hot:
             if self.budget.can_allocate("prefill"):
                 d_pre = 1
+            elif self._escalate(fabric_lag_s):
+                # the pool is exhausted and the wire is the pressure:
+                # spend quantization error before robbing the other tier
+                d_comp = 1
             elif (dec_cold and n_decode > cfg.min_decode
                   and self._trade_frees_enough("decode", "prefill")):
                 d_pre, d_dec = 1, -1             # trade: decode funds prefill
@@ -262,7 +332,12 @@ class JointAutoscaler:
             d_pre = -1                           # release to the pool
         elif dec_cold and n_decode > cfg.min_decode:
             d_dec = -1
-        if d_pre or d_dec:
+        elif (self.comp_policy is not None
+              and fabric_lag_s < cfg.comp_relax_lag_s
+              and self.comp_policy.ceiling > self._comp_floor
+              and self.comp_policy.lower_ceiling()):
+            d_comp = -1                          # quiet window: ship raw again
+        if d_pre or d_dec or d_comp:
             self._cooldown = cfg.cooldown_intervals
         self.history.append(JointScaleDecision(
             t=now, n_prefill=n_prefill, n_decode=n_decode,
@@ -270,7 +345,10 @@ class JointAutoscaler:
             tpot_p95=tpot_p95, prefill_lag_p95=pre_p95,
             decode_wait_p95=dwait_p95, prefill_backlog=prefill_backlog,
             decode_backlog=decode_backlog, d_prefill=d_pre, d_decode=d_dec,
-            decompress_util=decompress_util))
+            decompress_util=decompress_util, d_comp=d_comp,
+            comp_ceiling=(self.comp_policy.ceiling_mode
+                          if self.comp_policy is not None else None),
+            fabric_lag_s=fabric_lag_s))
         return d_pre, d_dec
 
 
@@ -296,10 +374,23 @@ def run_joint_autoscaled(fleet: Fleet, requests: Sequence[Request],
                          "(prefill_tier)")
     tier = fleet.prefill_tier
     budget = autoscaler.budget
+    n_dec0 = len(fleet._active_idxs())
+    need = (tier.n_active * budget.cfg.cost("prefill")
+            + n_dec0 * budget.cfg.cost("decode"))
+    if need > budget.available:
+        # fail at construction time with a clear message instead of dying
+        # mid-run inside HardwareBudget.allocate
+        raise ValueError(
+            f"budget too small for the initial split: {tier.n_active} "
+            f"prefill x {budget.cfg.cost('prefill')} accels + {n_dec0} "
+            f"decode x {budget.cfg.cost('decode')} accels needs {need}, "
+            f"{budget.available} free of {budget.cfg.total_accelerators}")
     for _ in range(tier.n_active):
         budget.allocate("prefill")
-    for _ in fleet._active_idxs():
+    for _ in range(n_dec0):
         budget.allocate("decode")
+    if autoscaler.comp_policy is None and tier.fabric.policy is not None:
+        autoscaler.bind_compression(tier.fabric.policy)
 
     reqs = sorted(requests, key=lambda r: r.arrival_time)
     finished: List[Request] = []
@@ -361,7 +452,8 @@ def run_joint_autoscaled(fleet: Fleet, requests: Sequence[Request],
         d_pre, d_dec = autoscaler.decide(
             t, ttfts, tpots, dwaits, pre_lags, tier.n_active,
             n_dec_active, prefill_backlog, decode_backlog,
-            decompress_util=decomp_total / (dt * max(n_dec_active, 1)))
+            decompress_util=decomp_total / (dt * max(n_dec_active, 1)),
+            fabric_lag_s=max(0.0, tier.fabric.free_at - t))
         if d_dec < 0:
             fleet.retire_replica(fleet._active_idxs()[-1])
             budget.release("decode")

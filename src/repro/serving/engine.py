@@ -21,6 +21,7 @@ from typing import Dict, List, Optional, Sequence
 
 from .adapter_cache import AdapterCache, CacheConfig
 from .request import Request, ServeStats
+from .resources import merge_mode_dict
 from .scheduler import Scheduler, SchedulerConfig
 
 
@@ -183,6 +184,8 @@ class ServingEngine:
                 # it, which can precede kv_landed_time
                 self.clock += r.kv_decompress_cost
                 self.stats.decompress_time += r.kv_decompress_cost
+                merge_mode_dict(self.stats.decompress_by_mode,
+                                {r.wire_mode: r.kv_decompress_cost})
                 r.decompress_done_time = self.clock
             self.running.append(r)
 

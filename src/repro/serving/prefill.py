@@ -38,7 +38,8 @@ from typing import Dict, List, Optional, Sequence
 
 from .adapter_cache import AdapterCache, CacheConfig
 from .request import Request
-from .resources import FabricConfig, FabricStats, KVFabric
+from .resources import (FabricConfig, FabricStats, KVFabric,
+                        kv_bytes_per_token, merge_mode_dict)
 from .scheduler import Scheduler, SchedulerConfig
 
 
@@ -88,6 +89,13 @@ class PrefillStats:
     kv_raw_bytes: int = 0            # bytes produced by prefill
     n_swaps: int = 0
     n_chunks: int = 0                # fabric chunks shipped (disagg)
+    # per-wire-mode fabric accounting (adaptive compression picks a mode
+    # per transfer; "raw" keys the uncompressed ones)
+    kv_wire_bytes_by_mode: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    kv_raw_bytes_by_mode: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    n_mode_switches: int = 0         # adaptive-policy level changes
 
     @classmethod
     def merged(cls, parts: Sequence["PrefillStats"]) -> "PrefillStats":
@@ -102,6 +110,10 @@ class PrefillStats:
             out.kv_raw_bytes += s.kv_raw_bytes
             out.n_swaps += s.n_swaps
             out.n_chunks += s.n_chunks
+            merge_mode_dict(out.kv_wire_bytes_by_mode,
+                            s.kv_wire_bytes_by_mode)
+            merge_mode_dict(out.kv_raw_bytes_by_mode, s.kv_raw_bytes_by_mode)
+            out.n_mode_switches += s.n_mode_switches
         return out
 
     def add_fabric(self, fs: FabricStats) -> "PrefillStats":
@@ -109,6 +121,9 @@ class PrefillStats:
         self.kv_bytes_moved += fs.kv_bytes_moved
         self.kv_raw_bytes += fs.kv_raw_bytes
         self.n_chunks += fs.n_chunks
+        merge_mode_dict(self.kv_wire_bytes_by_mode, fs.wire_bytes_by_mode)
+        merge_mode_dict(self.kv_raw_bytes_by_mode, fs.raw_bytes_by_mode)
+        self.n_mode_switches += fs.n_mode_switches
         return self
 
     def to_dict(self) -> Dict:
@@ -121,6 +136,9 @@ class PrefillStats:
             "kv_bytes_moved": self.kv_bytes_moved,
             "kv_raw_bytes": self.kv_raw_bytes,
             "kv_chunks": self.n_chunks,
+            "kv_wire_bytes_by_mode": dict(self.kv_wire_bytes_by_mode),
+            "kv_raw_bytes_by_mode": dict(self.kv_raw_bytes_by_mode),
+            "kv_mode_switches": self.n_mode_switches,
             "prefill_n_swaps": self.n_swaps,
         }
 
@@ -169,20 +187,24 @@ class PrefillWorker:
         """Record the produced KV cache on the fabric (never blocks this
         worker's next prefill); the fabric stamps readiness at resolve.
 
-        With wire compression configured on the fabric, the quantize /
-        projection kernel runs on THIS worker between prefills — the
-        compression cost is serialized on the worker's clock before the
-        handoff is recorded, so a compressed transfer starts later but
-        ships fewer bytes."""
+        The fabric plans the transfer's wire mode first (the static
+        per-fabric mode, or the adaptive policy's live-backlog pick).
+        When it compresses, the quantize / projection kernel runs on THIS
+        worker between prefills — the compression cost is serialized on
+        the worker's clock before the handoff is recorded, so a
+        compressed transfer starts later but ships fewer bytes.  A raw
+        pick (and a raw-locked adaptive policy) charges nothing, exactly
+        like a ``compression=None`` fabric."""
         nbytes = self.executor.kv_bytes(req)
-        comp = self.fabric.cfg.compression
+        comp = self.fabric.plan(req, self.clock, nbytes)
         if comp is not None:
-            t_comp = comp.compress_time(nbytes)
+            t_comp = comp.compress_time(
+                nbytes, kv_bytes_per_token(nbytes, req.prompt_len))
             self.clock += t_comp
             self.stats.compress_time += t_comp
         req.prefill_done_time = self.clock
         req.prefilled = True
-        self.fabric.request(req, self.clock, nbytes)
+        self.fabric.request(req, self.clock, nbytes, comp=comp)
 
     def step(self) -> bool:
         """Prefill one admitted batch; returns False when drained."""
@@ -229,6 +251,9 @@ class PrefillWorker:
             self.stats.kv_bytes_moved = fs.kv_bytes_moved
             self.stats.kv_raw_bytes = fs.kv_raw_bytes
             self.stats.n_chunks = fs.n_chunks
+            self.stats.kv_wire_bytes_by_mode = dict(fs.wire_bytes_by_mode)
+            self.stats.kv_raw_bytes_by_mode = dict(fs.raw_bytes_by_mode)
+            self.stats.n_mode_switches = fs.n_mode_switches
 
 
 class PrefillTier:

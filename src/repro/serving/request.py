@@ -6,6 +6,8 @@ from typing import List, Optional
 
 import numpy as np
 
+from .resources import merge_mode_dict
+
 
 @dataclasses.dataclass
 class Request:
@@ -34,12 +36,21 @@ class Request:
     # KV wire compression (stamped by the fabric when the handoff is
     # recorded): raw bytes prefill produced, bytes actually shipped, the
     # mode, and the decode-side dequantization cost the decode replica pays
-    # at admission (decompress_done_time is set when it does)
+    # at admission (decompress_done_time is set when it does).  With an
+    # adaptive fabric policy the mode is a PER-TRANSFER pick from live
+    # channel backlog, so it varies request to request; None means the
+    # transfer shipped raw (see `wire_mode`).
     kv_raw_bytes: int = 0
     kv_wire_bytes: int = 0
     kv_compression: Optional[str] = None
     kv_decompress_cost: float = 0.0
     decompress_done_time: Optional[float] = None
+
+    @property
+    def wire_mode(self) -> str:
+        """The handoff's wire mode with raw spelled out — the key the
+        per-mode fabric/prefill/decode stats aggregate under."""
+        return self.kv_compression or "raw"
 
     @property
     def ready_time(self) -> float:
@@ -102,6 +113,8 @@ class ServeStats:
     swap_time: float = 0.0
     compute_time: float = 0.0
     decompress_time: float = 0.0     # decode-side KV dequantization
+    # dequant cost split by the wire mode the fabric picked per transfer
+    decompress_by_mode: dict = dataclasses.field(default_factory=dict)
     n_swaps: int = 0
     sum_latency: float = 0.0
     latencies: List[float] = dataclasses.field(default_factory=list)
@@ -153,6 +166,7 @@ class ServeStats:
             out.swap_time += s.swap_time
             out.compute_time += s.compute_time
             out.decompress_time += s.decompress_time
+            merge_mode_dict(out.decompress_by_mode, s.decompress_by_mode)
             out.n_swaps += s.n_swaps
             out.sum_latency += s.sum_latency
             out.latencies.extend(s.latencies)
@@ -166,6 +180,7 @@ class ServeStats:
             "wall_time_s": self.wall_time, "swap_time_s": self.swap_time,
             "compute_time_s": self.compute_time, "n_swaps": self.n_swaps,
             "decompress_time_s": self.decompress_time,
+            "decompress_by_mode_s": dict(self.decompress_by_mode),
             "throughput_rps": self.throughput_rps,
             "throughput_tps": self.throughput_tps,
             "mean_latency_s": self.mean_latency,

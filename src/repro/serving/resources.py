@@ -31,6 +31,17 @@ capacity itself:
     the wire at its compressed size, and the decode replica pays a
     modeled dequantization cost at admission.
 
+  - :class:`AdaptiveCompressionPolicy` — the compute-for-bytes trade made
+    load-adaptive.  A static per-fabric mode pays quantization error and
+    (de)quant compute on an idle fabric and cannot reach for int4 under
+    saturation; the adaptive policy picks the mode *per transfer* from the
+    live channel backlog (outstanding wire bytes plus the ``free_at``
+    horizon vs the transfer's ``ready_at``), climbing a raw -> int8 ->
+    int4 ladder with hysteresis, under a mode *ceiling* the joint
+    autoscaler can raise before robbing a cold tier and relax in quiet
+    windows.  A ceiling (or ladder) locked at raw reproduces the
+    ``compression=None`` fabric bit-exactly.
+
 Degenerate configurations are exact by construction:
 
   * one worker, ``chunk_bytes == 0`` (whole-KV serial handoff) reproduces
@@ -50,7 +61,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 
 # ---------------------------------------------------------------------------
@@ -179,6 +190,14 @@ class KVCompressionConfig:
     # jax-free; tests/test_kvcomp.py asserts the two stay in sync
     WIRE_RATIO = {"int8": 33 / 64, "int4": 17 / 64}
     ERROR_BOUND = {"int8": 1 / 254, "int4": 1 / 14}
+    # packed-artifact structure, per channel: quantized values (1/2 or 1/4
+    # of the raw bf16 bytes) plus one f32 scale per BLOCK_TOKENS tokens —
+    # a tail block smaller than BLOCK_TOKENS carries a full scale, so its
+    # wire ratio is strictly worse than the full-block aggregate above
+    VALUE_RATIO = {"int8": 1 / 2, "int4": 1 / 4}
+    BLOCK_TOKENS = 128               # kv_quant.BLOCK_T
+    BLOCK_RAW_BYTES = 256            # one channel-block of bf16 tokens
+    SCALE_BYTES = 4                  # one f32 scale per channel per block
 
     def __post_init__(self):
         if self.mode not in self.MODES:
@@ -200,21 +219,204 @@ class KVCompressionConfig:
         """Worst-case per-channel relative error (None for lowrank)."""
         return self.ERROR_BOUND.get(self.mode)
 
-    def wire_bytes(self, raw_bytes: int) -> int:
+    def wire_bytes(self, raw_bytes: int,
+                   bytes_per_token: Optional[int] = None) -> int:
+        """On-the-wire size of one raw KV span, block-granularly.
+
+        Scales are per channel per ``BLOCK_TOKENS``-token block, so a
+        partial tail block pays a full scale: with ``bytes_per_token``
+        known (the real handoff path — see :func:`kv_bytes_per_token`) the
+        scale count is exact, ``ceil(tokens / 128) * channels``; without
+        it the span is modeled as per-channel 256-raw-byte blocks, one
+        scale per full-or-partial block.  Both reduce to the aggregate
+        ``WIRE_RATIO`` on block-aligned spans."""
         if raw_bytes <= 0:
             return 0
-        return max(1, math.ceil(raw_bytes * self.wire_ratio))
+        if self.mode == "lowrank":
+            return max(1, math.ceil(raw_bytes * self.lowrank_ratio))
+        value_bytes = math.ceil(raw_bytes * self.VALUE_RATIO[self.mode])
+        if (bytes_per_token is not None and bytes_per_token >= 2
+                and bytes_per_token % 2 == 0):
+            n_channels = bytes_per_token // 2
+            n_blocks = math.ceil(
+                raw_bytes / (bytes_per_token * self.BLOCK_TOKENS))
+            return value_bytes + self.SCALE_BYTES * n_blocks * n_channels
+        return (value_bytes
+                + self.SCALE_BYTES * math.ceil(raw_bytes
+                                               / self.BLOCK_RAW_BYTES))
 
-    def compress_time(self, raw_bytes: int) -> float:
+    def compress_time(self, raw_bytes: int,
+                      bytes_per_token: Optional[int] = None) -> float:
         """Prefill-side quantize/project cost for one KV cache."""
         if raw_bytes <= 0:
             return 0.0
-        return (self.kernel_overhead
-                + (raw_bytes + self.wire_bytes(raw_bytes)) / self.mem_bw)
+        wire = self.wire_bytes(raw_bytes, bytes_per_token)
+        return self.kernel_overhead + (raw_bytes + wire) / self.mem_bw
 
-    def decompress_time(self, raw_bytes: int) -> float:
+    def decompress_time(self, raw_bytes: int,
+                        bytes_per_token: Optional[int] = None) -> float:
         """Decode-side dequantize cost (same streaming roofline)."""
-        return self.compress_time(raw_bytes)
+        return self.compress_time(raw_bytes, bytes_per_token)
+
+
+def merge_mode_dict(into: Dict, other: Dict) -> None:
+    """Accumulate per-mode counters (shared by the fabric / prefill /
+    decode per-mode stats dicts)."""
+    for k, v in other.items():
+        into[k] = into.get(k, 0) + v
+
+
+def kv_bytes_per_token(nbytes: int, prompt_len: int) -> Optional[int]:
+    """Recover the bf16 KV bytes/token of a handoff from its request, or
+    None when `nbytes` does not decompose into whole per-token channels
+    (hand-built executors with synthetic KV sizes fall back to the
+    byte-granular block model)."""
+    if prompt_len > 0 and nbytes > 0 and nbytes % prompt_len == 0:
+        bpt = nbytes // prompt_len
+        if bpt % 2 == 0:
+            return bpt
+    return None
+
+
+# ---------------------------------------------------------------------------
+# adaptive per-transfer compression policy
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AdaptiveCompressionConfig:
+    """Per-transfer wire-mode selection from live channel backlog.
+
+    ``modes`` is the escalation ladder, level 0 first; the floor must be
+    ``"raw"`` so an idle fabric pays neither quantization error nor
+    (de)quant compute.  A transfer recorded while the channel's estimated
+    backlog (see :meth:`KVFabric.backlog_seconds`) exceeds
+    ``escalate_backlog_s[i - 1]`` ships at ladder level ``i`` (highest
+    threshold crossed wins — a spike jumps straight to int4).  Hysteresis
+    is asymmetric: escalation is immediate (latency protection), relaxing
+    drops one level at a time and only after ``min_dwell`` transfers at
+    the current level AND the backlog has fallen below ``relax_fraction``
+    of that level's threshold — so a backlog oscillating inside the band
+    does not thrash the mode.
+
+    ``initial_ceiling`` caps the ladder (None = top).  The joint
+    autoscaler owns the ceiling at runtime: it starts it low, raises it
+    under budget-exhausted prefill pressure *before* trading a replica
+    away from a cold tier, and relaxes it in quiet windows.
+
+    ``modes=("raw",)`` (or a ceiling pinned at 0) is the raw-locked
+    policy: bit-exact with a ``compression=None`` fabric.
+    """
+
+    modes: Tuple[str, ...] = ("raw", "int8", "int4")
+    escalate_backlog_s: Tuple[float, ...] = (0.02, 0.04)
+    relax_fraction: float = 0.25     # relax below this fraction of the band
+    min_dwell: int = 8               # transfers at a level before relaxing
+    initial_ceiling: Optional[int] = None    # None = top of the ladder
+    # per-mode cost knobs, forwarded to each level's KVCompressionConfig
+    lowrank_ratio: float = 0.25
+    mem_bw: float = 4 * 819e9
+    kernel_overhead: float = 20e-6
+
+    def __post_init__(self):
+        known = ("raw",) + KVCompressionConfig.MODES
+        if not self.modes or self.modes[0] != "raw":
+            raise ValueError("the ladder floor must be 'raw' (level 0)")
+        if len(set(self.modes)) != len(self.modes):
+            raise ValueError("duplicate ladder modes")
+        for m in self.modes:
+            if m not in known:
+                raise ValueError(f"unknown ladder mode {m!r}; one of {known}")
+        if len(self.escalate_backlog_s) < len(self.modes) - 1:
+            raise ValueError("need one escalate threshold per non-raw level")
+        steps = self.escalate_backlog_s[:len(self.modes) - 1]
+        if any(t <= 0 for t in steps) or list(steps) != sorted(set(steps)):
+            raise ValueError("escalate thresholds must be positive and "
+                             "strictly increasing")
+        if not 0.0 < self.relax_fraction < 1.0:
+            raise ValueError("relax_fraction must be in (0, 1)")
+        if self.min_dwell < 1:
+            raise ValueError("min_dwell must be >= 1")
+        if (self.initial_ceiling is not None
+                and not 0 <= self.initial_ceiling < len(self.modes)):
+            raise ValueError("initial_ceiling outside the ladder")
+
+
+class AdaptiveCompressionPolicy:
+    """Stateful ladder walker over an :class:`AdaptiveCompressionConfig`.
+
+    :meth:`decide` is called once per recorded transfer with the channel's
+    backlog estimate and returns the transfer's
+    :class:`KVCompressionConfig` (None for raw).  ``ceiling`` is the
+    autoscaler-owned cap; ``n_switches`` counts level changes (the
+    hysteresis tests bound it).
+    """
+
+    def __init__(self, cfg: AdaptiveCompressionConfig):
+        self.cfg = cfg
+        self.level = 0
+        self.ceiling = (self.top if cfg.initial_ceiling is None
+                        else cfg.initial_ceiling)
+        self.n_switches = 0
+        self.n_decisions = 0
+        self._dwell = 0
+        self._configs = {
+            m: KVCompressionConfig(mode=m, lowrank_ratio=cfg.lowrank_ratio,
+                                   mem_bw=cfg.mem_bw,
+                                   kernel_overhead=cfg.kernel_overhead)
+            for m in cfg.modes if m != "raw"}
+
+    @property
+    def top(self) -> int:
+        return len(self.cfg.modes) - 1
+
+    @property
+    def mode(self) -> str:
+        return self.cfg.modes[self.level]
+
+    @property
+    def ceiling_mode(self) -> str:
+        return self.cfg.modes[self.ceiling]
+
+    def _move(self, level: int) -> None:
+        self.level = level
+        self._dwell = 0
+        self.n_switches += 1
+
+    def decide(self, backlog_s: float) -> Optional[KVCompressionConfig]:
+        """Mode for the next transfer given the channel backlog estimate."""
+        cfg = self.cfg
+        self.n_decisions += 1
+        self._dwell += 1
+        target = 0
+        for i in range(1, len(cfg.modes)):
+            if backlog_s > cfg.escalate_backlog_s[i - 1]:
+                target = i
+        target = min(target, self.ceiling)
+        if target > self.level:
+            self._move(target)               # escalate immediately
+        elif (target < self.level and self._dwell >= cfg.min_dwell
+              and backlog_s < (cfg.relax_fraction
+                               * cfg.escalate_backlog_s[self.level - 1])):
+            self._move(self.level - 1)       # relax one step, out of band
+        return self._configs.get(self.mode)
+
+    # -- autoscaler-owned ceiling ------------------------------------------
+    def raise_ceiling(self) -> bool:
+        """One ladder level more headroom; False when already at the top."""
+        if self.ceiling >= self.top:
+            return False
+        self.ceiling += 1
+        return True
+
+    def lower_ceiling(self) -> bool:
+        """One level less; clamps the live level down with it."""
+        if self.ceiling <= 0:
+            return False
+        self.ceiling -= 1
+        if self.level > self.ceiling:
+            self._move(self.ceiling)
+        return True
 
 
 # ---------------------------------------------------------------------------
@@ -239,12 +441,20 @@ class FabricConfig:
     chunk_bytes: int = 0             # 0 = whole-KV serial handoff
     # wire compression; None ships raw KV (bit-exact with the PR-3 fabric)
     compression: Optional[KVCompressionConfig] = None
+    # per-transfer adaptive mode selection (mutually exclusive with the
+    # static `compression` mode); see AdaptiveCompressionPolicy
+    adaptive: Optional[AdaptiveCompressionConfig] = None
 
     def __post_init__(self):
         if self.bandwidth <= 0:
             raise ValueError("fabric bandwidth must be > 0")
+        if self.latency < 0:
+            raise ValueError("fabric latency must be >= 0")
         if self.chunk_bytes < 0:
             raise ValueError("chunk_bytes must be >= 0 (0 = serial)")
+        if self.compression is not None and self.adaptive is not None:
+            raise ValueError("configure either a static compression mode or "
+                             "an adaptive policy, not both")
 
     def n_chunks(self, nbytes: int) -> int:
         if self.chunk_bytes <= 0 or nbytes <= self.chunk_bytes:
@@ -260,6 +470,20 @@ class FabricStats:
     kv_bytes_moved: int = 0          # bytes on the wire (post-compression)
     kv_raw_bytes: int = 0            # bytes produced by prefill
     busy_time: float = 0.0           # channel occupancy (latency + wire time)
+    # per-wire-mode accounting ("raw" / "int8" / "int4" / "lowrank"): how
+    # many transfers each mode carried and the wire/raw bytes it covered
+    n_transfers_by_mode: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    wire_bytes_by_mode: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    raw_bytes_by_mode: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    n_mode_switches: int = 0         # adaptive-policy level changes
+
+    def _bump_mode(self, mode: str, wire: int, raw: int) -> None:
+        merge_mode_dict(self.n_transfers_by_mode, {mode: 1})
+        merge_mode_dict(self.wire_bytes_by_mode, {mode: wire})
+        merge_mode_dict(self.raw_bytes_by_mode, {mode: raw})
 
 
 class _Transfer:
@@ -272,10 +496,10 @@ class _Transfer:
     bit-exactly."""
 
     __slots__ = ("req", "ready_at", "nbytes", "raw_bytes", "wire_chunks",
-                 "n_chunks", "chunks_sent")
+                 "n_chunks", "chunks_sent", "mode")
 
     def __init__(self, req, ready_at: float, raw_bytes: int,
-                 wire_chunks: List[int]):
+                 wire_chunks: List[int], mode: str = "raw"):
         self.req = req
         self.ready_at = ready_at
         self.raw_bytes = raw_bytes
@@ -283,6 +507,7 @@ class _Transfer:
         self.nbytes = sum(wire_chunks)
         self.n_chunks = len(wire_chunks)
         self.chunks_sent = 0
+        self.mode = mode
 
     def next_chunk_bytes(self) -> int:
         return self.wire_chunks[self.chunks_sent]
@@ -299,11 +524,15 @@ class KVFabric:
     between a long transfer's chunks instead of waiting out the whole thing.
     """
 
+    _PLAN = object()                 # sentinel: request() plans its own mode
+
     def __init__(self, cfg: FabricConfig):
         self.cfg = cfg
         self.free_at = 0.0
         self.stats = FabricStats()
         self._pending: List[_Transfer] = []
+        self.policy = (AdaptiveCompressionPolicy(cfg.adaptive)
+                       if cfg.adaptive is not None else None)
 
     @classmethod
     def from_link(cls, link) -> "KVFabric":
@@ -311,43 +540,94 @@ class KVFabric:
         return cls(FabricConfig(bandwidth=link.bandwidth,
                                 latency=link.latency, chunk_bytes=0))
 
-    def _wire_chunks(self, nbytes: int) -> List[int]:
+    def backlog_seconds(self, at: float) -> float:
+        """Estimated channel time committed ahead of a transfer becoming
+        ready at `at`: the resolved horizon (``free_at``) beyond `at`,
+        plus every recorded-but-unresolved transfer's wire time and
+        per-chunk latencies.  All pending transfers contend with the new
+        one in the same resolve, so counting them regardless of their own
+        ``ready_at`` is the conservative live-load signal the adaptive
+        policy keys on."""
+        pending = sum(tr.nbytes / self.cfg.bandwidth
+                      + tr.n_chunks * self.cfg.latency
+                      for tr in self._pending)
+        return max(0.0, self.free_at - at) + pending
+
+    def plan(self, req, at: float, nbytes: int) -> \
+            Optional[KVCompressionConfig]:
+        """Pick this transfer's wire mode: the static per-fabric mode, or
+        the adaptive policy's per-transfer backlog decision (None = raw).
+        Prefill workers call this BEFORE charging compression to their
+        clock, then pass the result to :meth:`request`."""
+        if nbytes <= 0:
+            return None
+        if self.policy is not None:
+            return self.policy.decide(self.backlog_seconds(at))
+        return self.cfg.compression
+
+    def _wire_chunks(self, nbytes: int,
+                     comp: Optional[KVCompressionConfig],
+                     bytes_per_token: Optional[int]) -> List[int]:
         """Per-chunk wire sizes for a raw KV of `nbytes`.  Chunk boundaries
         are raw token ranges (compression quantizes each block
         independently, so a compressed chunk is a *smaller* wire unit —
         the first chunk lands sooner and every slot in the fair interleave
-        shortens); compression=None ships the raw spans unchanged."""
+        shortens); an uncompressed transfer ships the raw spans
+        unchanged.  Wire sizes are block-granular: a tail chunk smaller
+        than a 128-token block pays its full per-channel scales."""
         n = self.cfg.n_chunks(nbytes)
         if n == 1:
             raw_spans = [nbytes]
         else:
             cb = self.cfg.chunk_bytes
             raw_spans = [cb] * (n - 1) + [nbytes - cb * (n - 1)]
-        comp = self.cfg.compression
         if comp is None:
             return raw_spans
-        return [comp.wire_bytes(s) for s in raw_spans]
+        return [comp.wire_bytes(s, bytes_per_token) for s in raw_spans]
 
-    def request(self, req, ready_at: float, nbytes: int) -> None:
+    def request(self, req, ready_at: float, nbytes: int,
+                comp=_PLAN) -> None:
         """Record a KV handoff; scheduled at the next :meth:`resolve`.
 
         `nbytes` is the RAW KV size prefill produced; with wire
-        compression configured each raw chunk ships at its compressed
-        size and the request is stamped with its decode-side
-        decompression cost (charged by the decode engine at admission)."""
-        comp = self.cfg.compression
-        wire_chunks = self._wire_chunks(nbytes)
+        compression in play each raw chunk ships at its compressed size
+        and the request is stamped with its mode and decode-side
+        decompression cost (charged by the decode engine at admission).
+        `comp` is the planned mode for this transfer (see :meth:`plan`);
+        left unset, the fabric plans it here.
+
+        An empty KV (``nbytes <= 0``) has nothing to ship: it lands at
+        ``ready_at`` with no chunk, no per-chunk latency, and no channel
+        occupancy or stats traffic."""
+        if comp is self._PLAN:
+            comp = self.plan(req, ready_at, nbytes)
+        if nbytes <= 0:
+            req.kv_raw_bytes = max(0, nbytes)
+            req.kv_wire_bytes = 0
+            req.decode_ready_time = ready_at
+            req.kv_landed_time = ready_at
+            req.transfer_time = 0.0
+            return
+        bpt = kv_bytes_per_token(nbytes, req.prompt_len)
+        wire_chunks = self._wire_chunks(nbytes, comp, bpt)
         req.kv_raw_bytes = nbytes
         req.kv_wire_bytes = sum(wire_chunks)
+        mode = "raw"
         if comp is not None:
+            mode = comp.mode
             req.kv_compression = comp.mode
-            req.kv_decompress_cost = comp.decompress_time(nbytes)
-        self._pending.append(_Transfer(req, ready_at, nbytes, wire_chunks))
+            req.kv_decompress_cost = comp.decompress_time(nbytes, bpt)
+        self._pending.append(_Transfer(req, ready_at, nbytes, wire_chunks,
+                                       mode))
 
     def resolve(self) -> None:
         """Schedule all recorded transfers' chunks and stamp the requests:
         ``decode_ready_time`` at the first chunk's landing,
         ``kv_landed_time`` (and ``transfer_time``) at the last."""
+        if self.policy is not None:
+            # sync even with nothing pending: ceiling clamps between
+            # windows also count as level switches
+            self.stats.n_mode_switches = self.policy.n_switches
         if not self._pending:
             return
         pending = sorted(self._pending,
@@ -380,5 +660,6 @@ class KVFabric:
                 self.stats.transfer_time += tr.req.transfer_time
                 self.stats.kv_bytes_moved += tr.nbytes
                 self.stats.kv_raw_bytes += tr.raw_bytes
+                self.stats._bump_mode(tr.mode, tr.nbytes, tr.raw_bytes)
                 active.remove(tr)
         self.free_at = t

@@ -177,9 +177,15 @@ def run_elastic_study(model_cfg, mode: str, n_adapters: int,
     ``prefill_cfg=PrefillConfig(fabric=FabricConfig(...,
     compression=KVCompressionConfig(...)))`` — and threads through the
     whole cell: workers compress, chunks ship small, decode replicas pay
-    dequantization, and the joint autoscaler sees that load.
+    dequantization, and the joint autoscaler sees that load.  With
+    ``FabricConfig(..., adaptive=AdaptiveCompressionConfig(...))`` the
+    mode is instead picked per transfer from live channel backlog, and a
+    jointly autoscaled run additionally drives the policy's mode ceiling
+    (raised under budget-exhausted wire pressure before any replica
+    trade, relaxed in quiet windows — see ``JointScaleDecision.d_comp``).
     Returns merged :class:`FleetStats` (``stats.autoscaler`` holds the
-    decision history when autoscaled)."""
+    decision history when autoscaled; the prefill dict carries per-mode
+    wire-byte totals)."""
     hw = hw or ServingHardware()
     setting, cluster_of, budget = memory_matched_setup(
         model_cfg, n_adapters, cluster_assign_seed)

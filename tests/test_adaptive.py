@@ -1,0 +1,496 @@
+"""Adaptive per-transfer KV wire compression: ladder policy + hysteresis,
+raw-locked parity with the static compression=None fabric, per-mode
+accounting, the joint autoscaler's compression axis, and the fabric
+edge-case bugfixes (zero-byte handoffs, startup validation)."""
+import dataclasses
+
+import pytest
+
+from repro.serving.adapter_cache import AdapterCache, CacheConfig, DMAModel
+from repro.serving.autoscaler import (JointAutoscaler, JointAutoscalerConfig,
+                                      SLOConfig)
+from repro.serving.prefill import PrefillConfig, PrefillWorker
+from repro.serving.request import Request
+from repro.serving.resources import (AdaptiveCompressionConfig,
+                                     AdaptiveCompressionPolicy, BudgetConfig,
+                                     FabricConfig, HardwareBudget,
+                                     KVCompressionConfig, KVFabric,
+                                     kv_bytes_per_token)
+
+
+class FixedCostExecutor:
+    """Hand-computable executor: prefill 1s, decode step 0.5s, KV 1000 B."""
+
+    def __init__(self, prefill=1.0, decode=0.5, kv=1000):
+        self._prefill, self._decode, self._kv = prefill, decode, kv
+
+    def adapter_bytes(self, aid):
+        return 1
+
+    def shared_bytes(self):
+        return 0
+
+    def decode_step_time(self, batch):
+        return self._decode if batch else 0.0
+
+    def prefill_time(self, req):
+        return self._prefill
+
+    def kv_bytes(self, req):
+        return self._kv
+
+
+def _free_cache():
+    return AdapterCache(CacheConfig(1e9, DMAModel(bandwidth=1e30,
+                                                  latency=0.0)))
+
+
+def _worker(cfg, kv=1000):
+    w = PrefillWorker(cfg, FixedCostExecutor(kv=kv))
+    w.cache = _free_cache()
+    return w
+
+
+def _reqs(n, arrivals=None, new_tokens=2):
+    arrivals = arrivals or [0.0] * n
+    return [Request(rid=i, adapter_id=i, prompt_len=8,
+                    max_new_tokens=new_tokens, arrival_time=t)
+            for i, t in enumerate(arrivals)]
+
+
+# ---------------------------------------------------------------------------
+# ladder config + policy hysteresis
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_config_validation():
+    with pytest.raises(ValueError):
+        AdaptiveCompressionConfig(modes=())
+    with pytest.raises(ValueError):
+        AdaptiveCompressionConfig(modes=("int8", "raw"))  # floor must be raw
+    with pytest.raises(ValueError):
+        AdaptiveCompressionConfig(modes=("raw", "fp8"))
+    with pytest.raises(ValueError):
+        AdaptiveCompressionConfig(modes=("raw", "int8", "int8"))
+    with pytest.raises(ValueError):
+        AdaptiveCompressionConfig(escalate_backlog_s=(0.05,))  # too few
+    with pytest.raises(ValueError):
+        AdaptiveCompressionConfig(escalate_backlog_s=(0.05, 0.02))
+    with pytest.raises(ValueError):
+        AdaptiveCompressionConfig(relax_fraction=1.0)
+    with pytest.raises(ValueError):
+        AdaptiveCompressionConfig(min_dwell=0)
+    with pytest.raises(ValueError):
+        AdaptiveCompressionConfig(initial_ceiling=3)
+    # raw-locked ladder needs no thresholds at all
+    AdaptiveCompressionConfig(modes=("raw",), escalate_backlog_s=())
+
+
+def test_policy_escalates_immediately_and_jumps_levels():
+    p = AdaptiveCompressionPolicy(AdaptiveCompressionConfig(
+        escalate_backlog_s=(1.0, 2.0), min_dwell=8))
+    assert p.decide(0.0) is None and p.mode == "raw"
+    # a spike past the top threshold jumps straight to int4, dwell or not
+    assert p.decide(5.0).mode == "int4"
+    assert p.n_switches == 1
+
+
+def test_policy_hysteresis_does_not_thrash_on_oscillating_backlog():
+    """Backlog oscillating inside the hysteresis band (above relax_fraction
+    of the level's threshold, below the next escalation) changes the mode
+    exactly once, not per transfer."""
+    p = AdaptiveCompressionPolicy(AdaptiveCompressionConfig(
+        escalate_backlog_s=(1.0, 2.0), relax_fraction=0.5, min_dwell=4))
+    modes = [p.decide(b) and p.mode
+             for b in [1.1, 0.6, 1.1, 0.6, 1.1, 0.6, 1.1, 0.6, 1.1, 0.6]]
+    assert p.n_switches == 1
+    assert modes[0] == "int8" and all(m == "int8" for m in modes if m)
+    # dropping out of the band still waits out min_dwell before relaxing,
+    # and then steps down one level at a time
+    p2 = AdaptiveCompressionPolicy(AdaptiveCompressionConfig(
+        escalate_backlog_s=(1.0, 2.0), relax_fraction=0.5, min_dwell=3))
+    p2.decide(5.0)                       # -> int4
+    relaxed = [p2.decide(0.0) for _ in range(3)]
+    assert p2.mode == "int8"             # one step down after 3 dwelled
+    assert relaxed[-1].mode == "int8"
+    for _ in range(3):
+        p2.decide(0.0)
+    assert p2.mode == "raw"
+    assert p2.n_switches == 3
+
+
+def test_policy_ceiling_caps_and_clamps():
+    p = AdaptiveCompressionPolicy(AdaptiveCompressionConfig(
+        escalate_backlog_s=(1.0, 2.0), initial_ceiling=0))
+    assert p.decide(100.0) is None       # ceiling-locked at raw
+    assert p.raise_ceiling() and p.ceiling_mode == "int8"
+    assert p.decide(100.0).mode == "int8"    # capped below int4
+    assert p.raise_ceiling() and not p.raise_ceiling()   # top is int4
+    assert p.decide(100.0).mode == "int4"
+    assert p.lower_ceiling() and p.mode == "int8"    # level clamps down
+    p.lower_ceiling()
+    assert p.mode == "raw" and not p.lower_ceiling()
+
+
+# ---------------------------------------------------------------------------
+# raw-locked parity + per-mode accounting
+# ---------------------------------------------------------------------------
+
+
+def test_raw_locked_policy_bit_exact_with_compression_none():
+    """modes=("raw",) (and a ceiling pinned at 0) reproduces the PR-4
+    compression=None fabric bit-exactly: same request stamps, same fabric
+    stats, no compress time charged."""
+    locked = FabricConfig(bandwidth=100.0, latency=0.1, chunk_bytes=300,
+                          adaptive=AdaptiveCompressionConfig(modes=("raw",)))
+    ceiling0 = FabricConfig(bandwidth=100.0, latency=0.1, chunk_bytes=300,
+                            adaptive=AdaptiveCompressionConfig(
+                                initial_ceiling=0))
+    plain = FabricConfig(bandwidth=100.0, latency=0.1, chunk_bytes=300)
+    outs = []
+    for fab in (plain, locked, ceiling0):
+        w = _worker(PrefillConfig(n_workers=1, fabric=fab))
+        reqs = _reqs(3, arrivals=[0.0, 0.0, 5.0])
+        w.submit(reqs)
+        w.drain()
+        outs.append((
+            [(r.prefill_done_time, r.decode_ready_time, r.kv_landed_time,
+              r.transfer_time, r.kv_raw_bytes, r.kv_wire_bytes,
+              r.kv_compression, r.kv_decompress_cost) for r in reqs],
+            w.stats.compress_time, w.fabric.stats))
+    assert outs[0] == outs[1] == outs[2]
+    assert outs[0][1] == 0.0
+    assert outs[0][2].wire_bytes_by_mode == {"raw": 3000}
+
+
+def test_per_request_mode_stamps_match_per_mode_stats():
+    """Every request's stamped wire mode groups its kv_wire_bytes into
+    exactly the fabric's per-mode totals."""
+    fab = KVFabric(FabricConfig(
+        bandwidth=100.0, latency=0.0,
+        adaptive=AdaptiveCompressionConfig(escalate_backlog_s=(5.0, 15.0),
+                                           min_dwell=1)))
+    reqs = _reqs(6)
+    # serialized 1000-B transfers at 100 B/s: backlog grows ~10s per
+    # recorded transfer, walking the ladder raw -> int8 -> int4
+    for i, r in enumerate(reqs):
+        fab.request(r, float(i), 1000)
+    fab.resolve()
+    modes = [r.wire_mode for r in reqs]
+    assert modes[0] == "raw" and modes[-1] == "int4"
+    assert set(modes) == {"raw", "int8", "int4"}
+    by_mode = {}
+    for r in reqs:
+        by_mode[r.wire_mode] = by_mode.get(r.wire_mode, 0) + r.kv_wire_bytes
+    assert by_mode == fab.stats.wire_bytes_by_mode
+    assert sum(by_mode.values()) == fab.stats.kv_bytes_moved
+    assert fab.stats.raw_bytes_by_mode == {
+        m: 1000 * modes.count(m) for m in set(modes)}
+    assert fab.stats.n_transfers_by_mode == {
+        m: modes.count(m) for m in set(modes)}
+    assert fab.stats.n_mode_switches == 2
+    # compressed requests carry their decode-side dequant cost, raw none
+    for r in reqs:
+        assert (r.kv_decompress_cost > 0) == (r.kv_compression is not None)
+
+
+def test_adaptive_worker_charges_compress_only_when_quantizing():
+    """The worker's clock pays the quantize kernel only for transfers the
+    policy actually compressed; an idle fabric ships raw for free."""
+    fab = FabricConfig(
+        bandwidth=10.0, latency=0.0,
+        adaptive=AdaptiveCompressionConfig(
+            escalate_backlog_s=(50.0, 1e9), min_dwell=1,
+            mem_bw=1000.0, kernel_overhead=0.1))
+    w = _worker(PrefillConfig(n_workers=1, fabric=fab))
+    # both at t=0: first transfer sees an empty channel (raw), the second
+    # sees the first's 100s wire backlog and quantizes
+    reqs = _reqs(2)
+    w.submit(reqs)
+    w.drain()
+    assert reqs[0].wire_mode == "raw"
+    assert reqs[1].wire_mode == "int8"
+    comp = KVCompressionConfig(mode="int8", mem_bw=1000.0,
+                               kernel_overhead=0.1)
+    assert w.stats.compress_time == pytest.approx(comp.compress_time(1000))
+    assert reqs[1].kv_wire_bytes == comp.wire_bytes(1000)
+
+
+# ---------------------------------------------------------------------------
+# joint autoscaler: the compression axis
+# ---------------------------------------------------------------------------
+
+
+def _hot_prefill_args():
+    """prefill blowing its SLO share, decode comfortable, pool exhausted."""
+    return dict(n_prefill=1, n_decode=3, prefill_backlog=9, decode_backlog=1)
+
+
+def _exhausted_joint(policy=None):
+    budget = HardwareBudget(BudgetConfig(total_accelerators=4))
+    budget.allocate("prefill")
+    for _ in range(3):
+        budget.allocate("decode")
+    return JointAutoscaler(JointAutoscalerConfig(cooldown_intervals=0),
+                           SLOConfig(ttft_p95=1.0), budget,
+                           comp_policy=policy)
+
+
+def test_mode_escalation_fires_before_replica_trade():
+    """Budget exhausted + prefill hot + wire pressured: with ceiling
+    headroom the autoscaler raises the compression ceiling and does NOT
+    trade; only once the ladder is exhausted does the trade fire."""
+    policy = AdaptiveCompressionPolicy(AdaptiveCompressionConfig(
+        initial_ceiling=0))
+    a = _exhausted_joint(policy)
+    args = _hot_prefill_args()
+    for step, ceiling in ((1, "int8"), (2, "int4")):
+        assert a.decide(float(step), [0.6] * 20, [], [0.05] * 20,
+                        [0.9] * 20, fabric_lag_s=1.0, **args) == (0, 0)
+        h = a.history[-1]
+        assert h.d_comp == 1 and h.comp_ceiling == ceiling
+        assert h.fabric_lag_s == 1.0
+    # ladder exhausted: now the replica trade happens
+    assert a.decide(3.0, [0.6] * 20, [], [0.05] * 20, [0.9] * 20,
+                    fabric_lag_s=1.0, **args) == (1, -1)
+    assert a.history[-1].d_comp == 0
+
+
+def test_no_escalation_when_wire_is_not_the_pressure():
+    """Prefill hot but the fabric horizon is clear (compute-bound): adding
+    quantization would only add prefill compute, so the policy is left
+    alone and the trade fires directly."""
+    policy = AdaptiveCompressionPolicy(AdaptiveCompressionConfig(
+        initial_ceiling=0))
+    a = _exhausted_joint(policy)
+    assert a.decide(1.0, [0.6] * 20, [], [0.05] * 20, [0.9] * 20,
+                    fabric_lag_s=0.0, **_hot_prefill_args()) == (1, -1)
+    assert policy.ceiling == 0 and a.history[-1].d_comp == 0
+
+
+def test_both_tiers_hot_and_exhausted_escalates_instead_of_stalling():
+    """Both tiers hot, pool full, wire pressured: no tier may be robbed,
+    but shrinking wire bytes helps both — the ceiling is raised where the
+    policy-less autoscaler could only do nothing."""
+    policy = AdaptiveCompressionPolicy(AdaptiveCompressionConfig(
+        initial_ceiling=0))
+    both_hot = dict(n_prefill=1, n_decode=3, prefill_backlog=9,
+                    decode_backlog=99)
+    a = _exhausted_joint(policy)
+    assert a.decide(1.0, [2.0] * 20, [], [0.8] * 20, [0.9] * 20,
+                    fabric_lag_s=1.0, **both_hot) == (0, 0)
+    assert a.history[-1].d_comp == 1 and policy.ceiling_mode == "int8"
+    # without wire pressure (compute-bound) the window still stalls
+    a2 = _exhausted_joint(AdaptiveCompressionPolicy(
+        AdaptiveCompressionConfig(initial_ceiling=0)))
+    assert a2.decide(1.0, [2.0] * 20, [], [0.8] * 20, [0.9] * 20,
+                     fabric_lag_s=0.0, **both_hot) == (0, 0)
+    assert a2.history[-1].d_comp == 0
+
+
+def test_ceiling_relaxes_in_quiet_windows_down_to_its_bind_floor():
+    """Quiet windows hand back the headroom the autoscaler granted — one
+    level per window, stopping at the ceiling the policy was bound with."""
+    policy = AdaptiveCompressionPolicy(AdaptiveCompressionConfig(
+        initial_ceiling=0))
+    a = _exhausted_joint(policy)
+    a.decide(1.0, [0.6] * 20, [], [0.05] * 20, [0.9] * 20,
+             fabric_lag_s=1.0, **_hot_prefill_args())   # ceiling -> int8
+    assert policy.ceiling_mode == "int8"
+    policy.decide(100.0)                 # live at int8
+    quiet = dict(n_prefill=1, n_decode=1, prefill_backlog=2,
+                 decode_backlog=2, fabric_lag_s=0.0)
+    assert a.decide(2.0, [0.4] * 20, [0.001] * 20, [0.3] * 20, [0.3] * 20,
+                    **quiet) == (0, 0)
+    h = a.history[-1]
+    assert h.d_comp == -1 and h.comp_ceiling == "raw"
+    assert policy.mode == "raw"          # live level clamped with it
+    # at the bind floor: a further quiet window takes nothing more
+    assert a.decide(3.0, [0.4] * 20, [0.001] * 20, [0.3] * 20, [0.3] * 20,
+                    **quiet) == (0, 0)
+    assert a.history[-1].d_comp == 0
+
+
+def test_relax_never_lowers_a_ceiling_it_did_not_raise():
+    """A fabric that owns its full ladder (initial_ceiling=None) is not
+    quietly ratcheted down to raw by idle warm-up windows."""
+    policy = AdaptiveCompressionPolicy(AdaptiveCompressionConfig())
+    a = _exhausted_joint(policy)
+    for step in range(1, 4):
+        a.decide(float(step), [0.4] * 20, [0.001] * 20, [0.3] * 20,
+                 [0.3] * 20, n_prefill=1, n_decode=1, prefill_backlog=2,
+                 decode_backlog=2, fabric_lag_s=0.0)
+        assert a.history[-1].d_comp == 0
+    assert policy.ceiling == policy.top
+
+
+# ---------------------------------------------------------------------------
+# fabric edge-case bugfixes
+# ---------------------------------------------------------------------------
+
+
+def test_zero_byte_handoff_lands_at_ready_with_no_channel_traffic():
+    """An empty KV has nothing to ship: it lands at ready_at (no wire
+    round-trip), emits no chunk, pays no per-chunk latency, and leaves
+    the channel free."""
+    fab = KVFabric(FabricConfig(bandwidth=100.0, latency=0.5))
+    r0, r1 = _reqs(2)
+    fab.request(r0, 3.0, 0)
+    fab.resolve()
+    assert r0.decode_ready_time == 3.0 and r0.kv_landed_time == 3.0
+    assert r0.transfer_time == 0.0
+    assert r0.kv_raw_bytes == 0 and r0.kv_wire_bytes == 0
+    assert fab.stats.n_chunks == 0 and fab.stats.n_transfers == 0
+    assert fab.stats.busy_time == 0.0 and fab.free_at == 0.0
+    # a real transfer afterwards is not queued behind phantom chunks
+    fab.request(r1, 0.0, 100)
+    fab.resolve()
+    assert r1.decode_ready_time == pytest.approx(1.5)
+    # and through a worker: decode-ready == prefill-done, no compression
+    w = _worker(PrefillConfig(n_workers=1, fabric=FabricConfig(
+        bandwidth=100.0, latency=0.5,
+        adaptive=AdaptiveCompressionConfig())), kv=0)
+    reqs = _reqs(1)
+    w.submit(reqs)
+    w.drain()
+    assert reqs[0].decode_ready_time == reqs[0].prefill_done_time == 1.0
+    assert w.stats.compress_time == 0.0
+
+
+def test_fabric_config_validation_latency_and_exclusivity():
+    with pytest.raises(ValueError):
+        FabricConfig(latency=-1e-6)
+    with pytest.raises(ValueError):
+        FabricConfig(compression=KVCompressionConfig(mode="int8"),
+                     adaptive=AdaptiveCompressionConfig())
+    FabricConfig(latency=0.0)            # zero is a valid ideal channel
+
+
+def test_joint_autoscaler_rejects_budget_below_tier_floors():
+    budget = HardwareBudget(BudgetConfig(total_accelerators=3))
+    with pytest.raises(ValueError, match="tier floors"):
+        JointAutoscaler(JointAutoscalerConfig(min_prefill=2, min_decode=2),
+                        SLOConfig(), budget)
+    big = HardwareBudget(BudgetConfig(total_accelerators=2,
+                                      prefill_accels_per_worker=2))
+    with pytest.raises(ValueError, match="tier floors"):
+        JointAutoscaler(JointAutoscalerConfig(), SLOConfig(), big)
+
+
+def test_run_joint_autoscaled_rejects_oversized_initial_split():
+    """A fleet whose starting split does not fit the pool fails fast with
+    a clear ValueError instead of a mid-run MemoryError."""
+    from repro.configs import get_config
+    from repro.serving.router import FleetConfig
+    from repro.serving.simulator import run_elastic_study
+    from repro.serving.workload import WorkloadSpec, make_workload
+
+    cfg = get_config("mistral-7b")
+    reqs = make_workload(WorkloadSpec(n_requests=4, n_adapters=4))
+    with pytest.raises(ValueError, match="initial split"):
+        run_elastic_study(
+            cfg, "jd", 4, reqs,
+            FleetConfig(n_replicas=3, policy="cluster_affinity"),
+            prefill_cfg=PrefillConfig(n_workers=3),
+            budget_cfg=BudgetConfig(total_accelerators=4))
+
+
+def test_kv_bytes_per_token_helper():
+    assert kv_bytes_per_token(1024, 8) == 128
+    assert kv_bytes_per_token(1000, 8) is None     # 125 B/token is odd
+    assert kv_bytes_per_token(1000, 3) is None     # does not divide
+    assert kv_bytes_per_token(0, 8) is None
+    assert kv_bytes_per_token(1024, 0) is None
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the 2 GB/s bursty sweep
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_beats_every_static_mode_on_bursty_2g_sweep():
+    """On the 2 GB/s bursty cells the adaptive policy's p95 TTFT is <=
+    every static mode's and strictly below raw, while its quantized wire
+    volume stays strictly below always-int4's."""
+    from benchmarks.adaptive_compression import (adaptive_cell,
+                                                 adaptive_workload,
+                                                 quantized_wire_bytes)
+    from repro.configs import get_config
+
+    cfg = get_config("mistral-7b")
+    reqs = adaptive_workload(burst_cv=4.0)
+    static = {
+        name: adaptive_cell(cfg, reqs, 2e9, compression=comp)
+        for name, comp in (("raw", None),
+                           ("int8", KVCompressionConfig(mode="int8")),
+                           ("int4", KVCompressionConfig(mode="int4")))}
+    adaptive = adaptive_cell(cfg, reqs, 2e9,
+                             adaptive=AdaptiveCompressionConfig())
+    p95 = {k: v.total.ttft_pct(95) for k, v in static.items()}
+    ap95 = adaptive.total.ttft_pct(95)
+    assert all(ap95 <= v for v in p95.values()), (ap95, p95)
+    assert ap95 < p95["raw"]
+    q_adaptive = quantized_wire_bytes(adaptive.to_dict())
+    q_int4 = quantized_wire_bytes(static["int4"].to_dict())
+    assert 0 < q_adaptive < q_int4
+    # the ladder was actually walked: some transfers shipped raw
+    by_mode = adaptive.to_dict()["kv_wire_bytes_by_mode"]
+    assert by_mode.get("raw", 0) > 0 and by_mode.get("int4", 0) > 0
+
+
+def test_raw_locked_sweep_cell_bit_exact_with_pr4_baseline():
+    """The raw-locked adaptive cell reproduces PR 4's kvcomp raw chunked
+    cell (committed BENCH_kvcomp baseline) bit-exactly."""
+    import json
+    import pathlib
+    from benchmarks.adaptive_compression import (adaptive_cell,
+                                                 adaptive_workload)
+    from repro.configs import get_config
+
+    cfg = get_config("mistral-7b")
+    reqs = adaptive_workload(burst_cv=4.0)
+    locked = adaptive_cell(cfg, reqs, 2e9,
+                           adaptive=AdaptiveCompressionConfig(
+                               modes=("raw",)))
+    baseline_path = (pathlib.Path(__file__).parent.parent
+                     / "benchmarks" / "baselines" / "BENCH_kvcomp.json")
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    assert locked.total.throughput_rps == pytest.approx(
+        baseline["kvcomp_zipf1.0_bw2g_raw"]["rps"], rel=1e-12)
+
+
+def test_joint_compression_axis_beats_raw_locked_budget_cell():
+    """On the budget-6 joint cell the compression axis (ceiling raised
+    under wire pressure before replica trades) strictly beats the same
+    cell raw-locked, and the escalations are on the record."""
+    from benchmarks.adaptive_compression import (adaptive_workload,
+                                                 joint_axis_cell)
+    from repro.configs import get_config
+
+    cfg = get_config("mistral-7b")
+    reqs = adaptive_workload(burst_cv=4.0)
+    axis = joint_axis_cell(cfg, reqs, 2e9)
+    locked = joint_axis_cell(cfg, reqs, 2e9, raw_locked=True)
+    assert axis.total.ttft_pct(95) < locked.total.ttft_pct(95)
+    assert axis.total.throughput_rps > locked.total.throughput_rps
+    raises = [h for h in axis.autoscaler if h.d_comp > 0]
+    assert len(raises) == 2              # raw -> int8 -> int4
+    assert [h.comp_ceiling for h in raises] == ["int8", "int4"]
+    # escalations happened while the pool was exhausted, i.e. they were
+    # taken INSTEAD of a same-window trade
+    assert all(h.free_accels == 0 and h.d_prefill == 0 and h.d_decode == 0
+               for h in raises)
+    assert not any(h.d_comp for h in locked.autoscaler)
+
+
+def _req(rid=0, arrival=0.0):
+    return Request(rid=rid, adapter_id=0, prompt_len=8, max_new_tokens=2,
+                   arrival_time=arrival)
+
+
+def test_dataclass_replace_keeps_wire_fields_off():
+    """Workload copies used across cells must not leak per-cell stamps."""
+    r = dataclasses.replace(_req())
+    assert r.kv_compression is None and r.kv_wire_bytes == 0
+    assert r.wire_mode == "raw"
