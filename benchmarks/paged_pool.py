@@ -1,0 +1,144 @@
+"""Unified paging study: one paged HBM pool for adapter weights + KV blocks.
+
+PR 6 replaces the two statically sized per-replica pools (adapter cache
+bytes, KV slots) with one :class:`~repro.serving.resources.PagedPool` —
+S-LoRA's unified paging, at the 128-token page granularity the
+quantization kernels already use.  This study runs the same Zipf(1.0)
+skew-shift workload (popularity ranks permuted mid-stream) through the
+SAME allocator in two configurations at a fixed HBM budget:
+
+* ``unified`` — ``adapter_share=None``: every page is fungible, a skew
+  shift trades cache-resident adapters for decode KV pages and back.
+* ``split_XX`` — ``adapter_share=0.25/0.50``: the pre-PR-6 static carve-
+  out expressed as a degenerate configuration of the same pool.
+
+Acceptance (asserted in tests/test_paged.py): at equal budget the unified
+pool keeps strictly more adapters cache-resident at an equal-or-better
+decode batch, and never pays more adapter reloads.  The memory-
+architecture spec is docs/architecture.md.
+
+CSV columns: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.serving.engine import ServingHardware
+from repro.serving.request import Request
+from repro.serving.resources import PAGE_TOKENS
+from repro.serving.simulator import (build_engine, memory_matched_setup,
+                                     serving_footprint)
+from repro.serving.workload import WorkloadSpec, make_workload
+
+try:
+    from .common import csv_row
+except ImportError:                      # run as a script, not a module
+    from common import csv_row
+
+N_ADAPTERS = 64
+MODE = "lora"                            # uncompressed: adapter pages are big
+
+
+def skew_shift_workload(n_per_phase: int, seed: int = 0) -> List[Request]:
+    """Two Zipf(1.0) phases at 150 req/s; phase 2 permutes the popularity
+    ranks (a tenant-mix shift), which is exactly the event a static
+    adapter/KV split cannot follow."""
+    spec = WorkloadSpec(
+        n_requests=n_per_phase, n_adapters=N_ADAPTERS, popularity="zipf",
+        zipf_alpha=1.0, arrival="poisson", arrival_rate=150.0,
+        prompt_len_mean=256, prompt_len_std=32, new_tokens=32, seed=seed)
+    phase1 = make_workload(spec)
+    phase2 = make_workload(
+        WorkloadSpec(**{**spec.__dict__, "seed": seed + 1}))
+    perm = np.random.default_rng(seed + 2).permutation(N_ADAPTERS)
+    t0 = phase1[-1].arrival_time + 1e-3
+    for i, r in enumerate(phase2):
+        r.rid = n_per_phase + i
+        r.adapter_id = int(perm[r.adapter_id])
+        r.arrival_time += t0
+    return phase1 + phase2
+
+
+def paged_cell(cfg, requests: List[Request], pool_pages: int,
+               adapter_share: Optional[float], max_batch: int = 8):
+    """One single-replica decode cell on a `pool_pages`-page pool."""
+    setting, cluster_of, budget = memory_matched_setup(cfg, N_ADAPTERS)
+    fp = serving_footprint(cfg, MODE, N_ADAPTERS, setting)
+    page_bytes = fp.kv_bytes_per_token * PAGE_TOKENS
+    eng = build_engine(cfg, MODE, N_ADAPTERS, budget, ServingHardware(),
+                      cluster_of, setting, max_batch=max_batch,
+                      pool_bytes=float(pool_pages * page_bytes),
+                      pool_adapter_share=adapter_share)
+    eng.submit(requests)
+    return eng.run()
+
+
+def pool_sizes(cfg) -> dict:
+    """Pool sizes in pages, derived from the model footprint so the cells
+    stay meaningful if the config changes: the pool fits ~12 resident
+    adapters' pages plus a full batch of worst-case KV."""
+    setting, _, _ = memory_matched_setup(cfg, N_ADAPTERS)
+    fp = serving_footprint(cfg, MODE, N_ADAPTERS, setting)
+    page_bytes = fp.kv_bytes_per_token * PAGE_TOKENS
+    adapter_pages = max(1, math.ceil(fp.lora_bytes_per_adapter / page_bytes))
+    kv_pages_per_req = math.ceil((256 + 32 + 2 * 32) / PAGE_TOKENS)
+    return {"p12a": 12 * adapter_pages + 8 * kv_pages_per_req,
+            "adapter_pages": adapter_pages}
+
+
+def main(quick: bool = True, json_path: Optional[str] = None):
+    cfg = get_config("mistral-7b")
+    n_per_phase = 150 if quick else 400
+    shares = [("unified", None), ("split_25", 0.25)]
+    if not quick:
+        shares.append(("split_50", 0.50))
+    sizes = pool_sizes(cfg)
+    pool_pages = sizes["p12a"]
+    rows = []
+    metrics = {}
+    cells = {}
+    for name, share in shares:
+        reqs = skew_shift_workload(n_per_phase)
+        t0 = time.perf_counter()
+        stats = paged_cell(cfg, reqs, pool_pages, share)
+        dt = (time.perf_counter() - t0) * 1e6
+        d = stats.to_dict()
+        cells[name] = d
+        derived = (f"rps={d['throughput_rps']:.2f};"
+                   f"resident_peak={d['peak_resident_adapters']};"
+                   f"batch_peak={d['peak_batch']};"
+                   f"kv_pages_peak={d['peak_kv_pages']};"
+                   f"adapter_pages_peak={d['peak_adapter_pages']};"
+                   f"reclaims={d['n_page_reclaims']};"
+                   f"swaps={d['n_swaps']};blocked={d['n_page_blocked']}")
+        rows.append(csv_row(f"paged_{name}_p{pool_pages}", dt, derived))
+        metrics[f"paged_{name}"] = {"rps": d["throughput_rps"]}
+    u, s = cells["unified"], cells["split_25"]
+    rows.append(csv_row(
+        "paged_skew_shift_headline", 0.0,
+        f"unified_more_resident="
+        f"{u['peak_resident_adapters'] > s['peak_resident_adapters']};"
+        f"equal_or_better_batch={u['peak_batch'] >= s['peak_batch']};"
+        f"no_extra_swaps={u['n_swaps'] <= s['n_swaps']}"))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep for CI smoke")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write deterministic metrics as JSON "
+                         "(CI perf gate; see benchmarks/check_regression.py)")
+    args = ap.parse_args()
+    print("\n".join(main(quick=args.quick, json_path=args.json)))

@@ -1,0 +1,171 @@
+#!/usr/bin/env python
+"""Docs reference checker (CI docs lane).
+
+Every module path (`serving/resources.py`, `tests/test_paged.py::Name`),
+dotted module (`repro.kernels.kv_quant`), `ClassName`, `Class.attr`, and
+`SCREAMING_CASE` constant mentioned in inline code spans of the checked
+markdown files must exist in the tree.  Dangling references fail the run
+— docs rot is a CI failure, not a review nit.
+
+Checked files: everything under docs/ plus README.md.  Fenced code
+blocks are skipped (they hold diagrams and shell transcripts); only
+inline `backtick` spans are parsed.  Tokens that do not look like code
+references (flags, shell fragments, JSON keys, snake_case words) are
+ignored rather than guessed at.
+
+Usage:  python scripts/check_docs_refs.py  (exit 1 on any dangling ref)
+"""
+from __future__ import annotations
+
+import builtins
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SRC_DIRS = ("src", "tests", "benchmarks", "scripts", "examples")
+
+RE_FENCE = re.compile(r"^(```|~~~)", re.M)
+RE_SPAN = re.compile(r"`([^`\n]+)`")
+RE_CALL = re.compile(r"^([A-Za-z_][\w.]*)\(.*\)$")
+RE_DOTTED = re.compile(r"^(repro|tests|benchmarks|scripts)(\.[A-Za-z_]\w*)+$")
+RE_CLASS_ATTR = re.compile(r"^([A-Z][A-Za-z0-9]*)\.([a-z_]\w*)$")
+RE_CLASS = re.compile(r"^[A-Z][A-Za-z0-9]*$")
+RE_CONST = re.compile(r"^[A-Z][A-Z0-9_]{2,}$")
+RE_DEF = re.compile(r"^(?:class|def)\s+(\w+)", re.M)
+RE_CLASS_DEF = re.compile(r"^class\s+(\w+)", re.M)
+
+BUILTINS = set(dir(builtins))
+
+
+def _iter_source_files():
+    for d in SRC_DIRS:
+        base = ROOT / d
+        if base.is_dir():
+            yield from sorted(base.rglob("*.py"))
+
+
+def build_index():
+    """Map every top-level class name to its defining files, and collect
+    all class/def names plus the full source text (for constants and
+    dynamically-stamped attributes)."""
+    class_files: dict[str, list[pathlib.Path]] = {}
+    defined: set[str] = set()
+    all_text: list[str] = []
+    for py in _iter_source_files():
+        text = py.read_text()
+        all_text.append(text)
+        defined.update(RE_DEF.findall(text))
+        for name in RE_CLASS_DEF.findall(text):
+            class_files.setdefault(name, []).append(py)
+    return class_files, defined, "\n".join(all_text)
+
+
+def resolve_path(ref: str) -> pathlib.Path | None:
+    for base in ("", "src", "src/repro"):
+        p = ROOT / base / ref
+        if p.is_file():
+            return p
+    return None
+
+
+def strip_fences(md: str) -> str:
+    out, keep = [], True
+    for line in md.splitlines():
+        if RE_FENCE.match(line):
+            keep = not keep
+            continue
+        if keep:
+            out.append(line)
+    return "\n".join(out)
+
+
+def check_file(md_path, class_files, defined, source_text):
+    errors = []
+    text = strip_fences(md_path.read_text())
+    for span in RE_SPAN.findall(text):
+        tok = span.strip()
+        call = RE_CALL.match(tok)
+        if call and " " not in call.group(1):
+            tok = call.group(1)
+        if " " in tok or "=" in tok:
+            continue
+
+        ext = re.search(r"\.(md|py|json|txt|csv|yml|yaml|toml)(::|$)", tok)
+        if ext and ext.group(1) != "py" and ext.group(1) != "md":
+            continue                       # data files: not docs-gated
+        if ext:
+            ref, _, member = tok.partition("::")
+            path = resolve_path(ref)
+            if path is None:
+                errors.append(f"{md_path.name}: dangling file `{tok}`")
+            elif member and not re.search(
+                    rf"\b{re.escape(member)}\b", path.read_text()):
+                errors.append(
+                    f"{md_path.name}: `{member}` not found in `{ref}`")
+            continue
+
+        if RE_DOTTED.match(tok):
+            parts = tok.split(".")
+            # the last component may be a module, a package, or a name
+            # defined inside the parent module
+            for cut in (len(parts), len(parts) - 1):
+                ref = "/".join(parts[:cut])
+                if resolve_path(ref + ".py") or resolve_path(
+                        ref + "/__init__.py"):
+                    break
+            else:
+                errors.append(f"{md_path.name}: dangling module `{tok}`")
+                continue
+            tail = parts[cut:]
+            if tail and tail[0] not in defined:
+                errors.append(f"{md_path.name}: dangling name `{tok}`")
+            continue
+
+        m = RE_CLASS_ATTR.match(tok)
+        if m:
+            cls, attr = m.groups()
+            files = class_files.get(cls)
+            if not files:
+                errors.append(f"{md_path.name}: dangling class `{tok}`")
+            elif not any(re.search(rf"\b{re.escape(attr)}\b",
+                                   f.read_text()) for f in files) \
+                    and not re.search(rf"\b{re.escape(attr)}\b", source_text):
+                errors.append(f"{md_path.name}: dangling attr `{tok}`")
+            continue
+
+        if RE_CLASS.match(tok) and any(c.islower() for c in tok):
+            if tok not in class_files and tok not in BUILTINS:
+                errors.append(f"{md_path.name}: dangling class `{tok}`")
+            continue
+
+        if RE_CONST.match(tok):
+            if not re.search(rf"\b{re.escape(tok)}\b", source_text):
+                errors.append(f"{md_path.name}: dangling constant `{tok}`")
+            continue
+    return errors
+
+
+def main() -> int:
+    docs = sorted((ROOT / "docs").glob("**/*.md"))
+    readme = ROOT / "README.md"
+    if readme.is_file():
+        docs.append(readme)
+    if not docs:
+        print("check_docs_refs: no markdown files found", file=sys.stderr)
+        return 1
+    class_files, defined, source_text = build_index()
+    errors = []
+    n_spans = 0
+    for md in docs:
+        n_spans += len(RE_SPAN.findall(strip_fences(md.read_text())))
+        errors.extend(check_file(md, class_files, defined, source_text))
+    for e in errors:
+        print(f"[fail] {e}")
+    print(f"check_docs_refs: {len(docs)} files, {n_spans} code spans, "
+          f"{len(errors)} dangling")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,6 +6,20 @@ axis so fp32 scratch accumulators persist across KV blocks of one (b, head).
 Used by the serving engine's decode step and by the sequence-sharded
 long-context path (each shard runs this kernel over its KV slice, partial
 (m, l, o) stats are merged across shards — see distributed/collectives.py).
+
+Two layouts share one kernel body:
+
+- :func:`flash_decode` — contiguous KV, ``k/v: (B, S, Kv, hd)``.
+- :func:`flash_decode_paged` — unified-paging KV (S-LoRA/Punica): each
+  sequence's cache lives in non-contiguous :data:`PAGE_TOKENS`-token pages
+  of a shared pool, ``k/v: (P, page_t, Kv, hd)``, addressed through a per-
+  sequence page table.  The page table rides in as a SECOND scalar-prefetch
+  operand (the adapter-id pattern of ``sgmv.py``): the k/v BlockSpec index
+  maps read ``pt[b, s]`` to fetch logical block ``s``'s physical page, so
+  the gather costs nothing extra — it is just block addressing.  The body
+  is the *same function* as the contiguous kernel, so the two are bit-exact
+  given equal logical content (asserted in tests/test_paged.py against the
+  ``kernels/ref.py`` oracle over permuted page tables).
 """
 from __future__ import annotations
 
@@ -104,4 +118,72 @@ def flash_decode(q: Array, k: Array, v: Array, kv_len: Array, *,
         ],
         interpret=interpret,
     )(kv_len, qg, k, v)
+    return out.reshape(B, H, hd), l, m
+
+
+def _decode_paged_kernel(pt_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
+                         l_ref, m_ref, acc_ref, m_sc, l_sc):
+    # pt_ref is consumed by the k/v BlockSpec index maps (physical page
+    # lookup); the softmax body is the contiguous kernel, unchanged — that
+    # sharing is what makes paged vs contiguous bit-exact.
+    del pt_ref
+    _decode_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, l_ref, m_ref,
+                   acc_ref, m_sc, l_sc)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_decode_paged(q: Array, k_pages: Array, v_pages: Array,
+                       page_table: Array, kv_len: Array, *,
+                       interpret: bool = True):
+    """Gathered-page flash decode over a unified paged KV pool.
+
+    q: (B, H, hd); k_pages/v_pages: (P, page_t, Kv, hd) — the pool's
+    physical pages; page_table: (B, n_blocks) int32 — sequence b's logical
+    KV block s lives in page ``page_table[b, s]``; kv_len: (B,) int32.
+
+    Entries of `page_table` beyond ``ceil(kv_len[b] / page_t)`` must be
+    valid page indices (e.g. 0) — their tokens are masked by `kv_len` but
+    the blocks are still fetched.  Returns (out (B, H, hd),
+    l (B, Kv, G, 1), m (B, Kv, G, 1)) exactly like :func:`flash_decode`.
+    """
+    B, H, hd = q.shape
+    page_t, Kv = k_pages.shape[1], k_pages.shape[2]
+    n_blocks = page_table.shape[1]
+    G = H // Kv
+    grid = (B, Kv, n_blocks)
+    qg = q.reshape(B, Kv, G, hd)
+    out, l, m = pl.pallas_call(
+        _decode_paged_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd),
+                             lambda b, h, s, pt, kl: (b, h, 0, 0)),
+                pl.BlockSpec((1, page_t, 1, hd),
+                             lambda b, h, s, pt, kl: (pt[b, s], 0, h, 0)),
+                pl.BlockSpec((1, page_t, 1, hd),
+                             lambda b, h, s, pt, kl: (pt[b, s], 0, h, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, G, hd),
+                             lambda b, h, s, pt, kl: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, G, 1),
+                             lambda b, h, s, pt, kl: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, G, 1),
+                             lambda b, h, s, pt, kl: (b, h, 0, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((G, hd), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Kv, G, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, Kv, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, Kv, G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_table, kv_len, qg, k_pages, v_pages)
     return out.reshape(B, H, hd), l, m

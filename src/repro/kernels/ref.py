@@ -94,6 +94,30 @@ def flash_decode_ref(q: Array, k: Array, v: Array,
     return out.reshape(B, H, hd).astype(q.dtype)
 
 
+def gather_pages_ref(pages: Array, page_table: Array) -> Array:
+    """Materialize a contiguous KV layout from a paged pool.
+
+    pages: (P, page_t, Kv, hd) physical pages; page_table: (B, n_blocks)
+    int32 — sequence b's logical block s lives in page ``page_table[b, s]``.
+    Returns (B, n_blocks * page_t, Kv, hd): exactly the layout the
+    contiguous :func:`flash_decode_ref` / Pallas kernel consume, so the
+    gathered-page kernel can be checked against the contiguous oracle.
+    """
+    B, n_blocks = page_table.shape
+    g = pages[page_table]                    # (B, n_blocks, page_t, Kv, hd)
+    return g.reshape(B, n_blocks * pages.shape[1], *pages.shape[2:])
+
+
+def flash_decode_paged_ref(q: Array, k_pages: Array, v_pages: Array,
+                           page_table: Array,
+                           kv_len: Optional[Array] = None) -> Array:
+    """Paged decode-attention oracle: gather to contiguous, then the
+    contiguous oracle — the reference the Pallas gathered-page path must
+    match bit-for-bit on equal logical content."""
+    return flash_decode_ref(q, gather_pages_ref(k_pages, page_table),
+                            gather_pages_ref(v_pages, page_table), kv_len)
+
+
 def group_tokens_by_adapter(ids: Array, n_adapters: int, tile: int
                             ) -> Tuple[Array, Array, Array]:
     """Host-side grouping: sort tokens by adapter and pad each group to a

@@ -9,12 +9,26 @@ the whole Sigma set fits, eliminating swaps entirely.
 Transfers are modeled non-blocking (vLLM-style): a single copy engine whose
 busy-until time overlaps compute; a step stalls only if it needs an adapter
 whose transfer hasn't completed.
+
+Two capacity regimes (PR 6, unified paging — spec in ``docs/architecture.md``):
+
+  * ``pool=None`` (legacy): a private byte budget, ``cfg.capacity_bytes``.
+    Bit-exact with the pre-paging cache — all regression-locked benchmark
+    numbers run this path.
+  * ``pool=PagedPool``: adapter weights occupy whole pages of the replica's
+    shared HBM pool (S-LoRA's unified paging), competing with KV blocks.
+    Capacity checks go through the pool; ``cfg.capacity_bytes`` is ignored.
+    The engine registers :meth:`reclaim` as the pool's pressure valve, so a
+    KV reservation that does not fit evicts cold adapters — and an adapter
+    miss can, symmetrically, use pages freed by finished decodes.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Dict, Iterable, Set
+from typing import Dict, Iterable, Optional, Set
+
+from .resources import PagedPool
 
 
 @dataclasses.dataclass
@@ -25,15 +39,16 @@ class DMAModel:
 
 @dataclasses.dataclass
 class CacheConfig:
-    capacity_bytes: float            # HBM budget for adapter weights
+    capacity_bytes: float            # HBM budget (bytes); unused when pooled
     dma: DMAModel = dataclasses.field(default_factory=DMAModel)
 
 
 class AdapterCache:
     """LRU over adapter entries + pinned shared entries."""
 
-    def __init__(self, cfg: CacheConfig):
+    def __init__(self, cfg: CacheConfig, pool: Optional[PagedPool] = None):
         self.cfg = cfg
+        self.pool = pool
         self._resident: "OrderedDict[int, int]" = OrderedDict()  # id -> bytes
         self._inflight_prefetch: Dict[int, float] = {}  # id -> ready_at
         self._pinned_bytes = 0
@@ -50,13 +65,32 @@ class AdapterCache:
 
     @property
     def capacity(self) -> float:
+        if self.pool is not None:
+            return self.pool.total_pages * self.pool.cfg.page_bytes
         return self.cfg.capacity_bytes
 
     def fits(self, n_more: int) -> bool:
+        if self.pool is not None:
+            return self.pool.can_alloc("adapter", self.pool.pages_for(n_more))
         return self.used_bytes + n_more <= self.capacity
+
+    def _pages(self, nbytes: int) -> int:
+        return 0 if self.pool is None else self.pool.pages_for(nbytes)
+
+    def _evict(self, aid: int) -> None:
+        """Drop a resident entry and release its bytes/pages."""
+        b = self._resident.pop(aid)
+        self._inflight_prefetch.pop(aid, None)
+        self._used -= b
+        if self.pool is not None:
+            self.pool.free("adapter", self._pages(b))
 
     # -- pinned shared state (compressed bases) ----------------------------
     def pin_shared(self, nbytes: int) -> None:
+        if self.pool is not None:
+            self.pool.alloc("pinned", self._pages(nbytes))  # raises if full
+            self._pinned_bytes += nbytes
+            return
         if self._pinned_bytes + self._used + nbytes > self.capacity:
             raise MemoryError(
                 f"shared bases ({nbytes/1e6:.1f} MB) exceed adapter budget "
@@ -71,11 +105,14 @@ class AdapterCache:
         if aid in self._resident:
             self._resident.move_to_end(aid)
 
-    def ensure(self, aid: int, nbytes: int, now: float) -> float:
+    def ensure(self, aid: int, nbytes: int, now: float,
+               protected: Optional[Set[int]] = None) -> float:
         """Make `aid` resident; returns the time the adapter is usable.
 
         Eviction is free (drop); transfer is queued on the copy engine and
-        overlaps compute — the caller stalls only until the returned time."""
+        overlaps compute — the caller stalls only until the returned time.
+        In pooled mode, adapters in `protected` (the engine's running
+        batch) are never chosen as eviction victims."""
         if aid in self._resident:
             self._resident.move_to_end(aid)
             # promoted prefetch: usable once its background transfer lands —
@@ -95,13 +132,29 @@ class AdapterCache:
                     ready = cold
             return max(now, ready)
         # evict LRU until it fits
-        while self._used + self._pinned_bytes + nbytes > self.capacity \
-                and self._resident:
-            evicted, b = self._resident.popitem(last=False)
-            self._inflight_prefetch.pop(evicted, None)
-            self._used -= b
-        if self._used + self._pinned_bytes + nbytes > self.capacity:
-            raise MemoryError("adapter larger than total budget")
+        if self.pool is not None:
+            need = self._pages(nbytes)
+            safe = protected or ()
+            while not self.pool.can_alloc("adapter", need):
+                victim = next((a for a in self._resident if a not in safe),
+                              None)
+                if victim is None:
+                    break
+                self._evict(victim)
+            if not self.pool.try_alloc("adapter", need):
+                raise MemoryError(
+                    f"adapter ({need} pages) larger than the pool's adapter "
+                    f"capacity ({self.pool.adapter_cap} pages, "
+                    f"{self.pool.used['pinned']} pinned, "
+                    f"{self.pool.used['kv']} held by KV)")
+        else:
+            while self._used + self._pinned_bytes + nbytes > self.capacity \
+                    and self._resident:
+                evicted, b = self._resident.popitem(last=False)
+                self._inflight_prefetch.pop(evicted, None)
+                self._used -= b
+            if self._used + self._pinned_bytes + nbytes > self.capacity:
+                raise MemoryError("adapter larger than total budget")
         start = max(now, self.copy_engine_free_at)
         t_done = start + self.cfg.dma.latency + nbytes / self.cfg.dma.bandwidth
         self.copy_engine_free_at = t_done
@@ -134,7 +187,10 @@ class AdapterCache:
         """
         if self.is_resident(aid):
             return
-        if self._used + self._pinned_bytes + nbytes > self.capacity:
+        if self.pool is not None:
+            if not self.pool.try_alloc("adapter", self._pages(nbytes)):
+                return                # would need eviction: not worth it
+        elif self._used + self._pinned_bytes + nbytes > self.capacity:
             return                    # would need eviction: not worth it
         start = max(now, self.copy_engine_free_at,
                     max(self._inflight_prefetch.values(), default=0.0))
@@ -148,3 +204,40 @@ class AdapterCache:
     @property
     def resident_ids(self) -> Set[int]:
         return set(self._resident)
+
+    # -- page-granular pressure (pooled mode only) --------------------------
+    def evictable_pages(self, protected: Set[int]) -> int:
+        """Pages that :meth:`reclaim` could free without touching adapters
+        in `protected` (the running batch + the one being admitted)."""
+        if self.pool is None:
+            return 0
+        return sum(self._pages(b) for aid, b in self._resident.items()
+                   if aid not in protected)
+
+    def reclaim(self, n_pages: int, protected: Set[int]) -> int:
+        """Evict cold adapters to free up to `n_pages` of pool pages.
+
+        Registered with the pool (:meth:`PagedPool.set_reclaimer
+        <repro.serving.resources.PagedPool.set_reclaimer>`) by the engine:
+        this is how a KV reservation pushes adapters out.  Eviction order —
+        prefetched-but-never-used entries first (speculative bytes are the
+        cheapest to drop), then true LRU; `protected` ids are never evicted.
+        Returns the pages actually freed (may be < `n_pages`)."""
+        if self.pool is None:
+            return 0
+        freed = 0
+        # two passes over a snapshot: OrderedDict order IS coldest-first,
+        # and prefetched-but-unused entries sit at the cold end by
+        # construction, but a promoted prefetch leaves the map, so walk
+        # the inflight set explicitly first.
+        victims = [aid for aid in self._resident
+                   if aid in self._inflight_prefetch and aid not in protected]
+        victims += [aid for aid in self._resident
+                    if aid not in self._inflight_prefetch
+                    and aid not in protected]
+        for aid in victims:
+            if freed >= n_pages:
+                break
+            freed += self._pages(self._resident[aid])
+            self._evict(aid)
+        return freed

@@ -36,6 +36,16 @@ to classify a decode tier cold while it exceeds
 ``decompress_cold_util`` — wire compression must not trick the trader
 into robbing the tier that is paying for it.
 
+With unified paging (decode engines built over a
+:class:`~repro.serving.resources.PagedPool`) the joint autoscaler's budget
+accounting sees *pages*, not just whole-replica footprints: the driver
+reports the worst replica's pool utilization (``kv_page_util``, fraction of
+pages in use) and the policy classifies a page-saturated decode tier hot —
+admissions there are blocking on memory, which latency percentiles can
+miss entirely when the running batch is small but its KV reservations are
+large — and never cold, so a trade cannot retire the replica that is the
+fleet's page headroom.
+
 With an *adaptive* fabric policy
 (:class:`~repro.serving.resources.AdaptiveCompressionPolicy`) the joint
 autoscaler gains a third axis: the policy's mode ceiling.  When the
@@ -154,6 +164,14 @@ class JointAutoscalerConfig:
     # retiring a replica would re-concentrate that dequantization load on
     # the survivors even when per-request decode waits look comfortable
     decompress_cold_util: float = 0.25
+    # unified paging (engines with a PagedPool): a decode tier whose
+    # worst replica has page utilization above page_hot_util (fraction of
+    # pool pages in use, 0..1) is classified hot even when latency looks
+    # fine — admissions are blocking on MEMORY, and more replicas is the
+    # only lever that adds pages; the same bound vetoes the cold
+    # classification, so the trader never retires a replica whose pool is
+    # nearly full
+    page_hot_util: float = 0.92
     # adaptive-compression axis (needs a bound AdaptiveCompressionPolicy):
     # raise the fabric's mode ceiling when prefill is hot, the pool is
     # exhausted, and the fabric's resolved horizon extends this far past
@@ -183,6 +201,7 @@ class JointScaleDecision:
     d_comp: int = 0                  # mode-ceiling delta (+1 raise, -1 relax)
     comp_ceiling: Optional[str] = None   # ceiling mode after this decision
     fabric_lag_s: float = 0.0        # fabric horizon past the window end
+    kv_page_util: float = 0.0        # worst decode replica's page pressure
 
 
 class JointAutoscaler:
@@ -251,8 +270,14 @@ class JointAutoscaler:
                prefill_lags: Sequence[float], n_prefill: int, n_decode: int,
                prefill_backlog: int, decode_backlog: int,
                decompress_util: float = 0.0,
-               fabric_lag_s: float = 0.0) -> Tuple[int, int]:
+               fabric_lag_s: float = 0.0,
+               kv_page_util: float = 0.0) -> Tuple[int, int]:
         """(prefill delta, decode delta) for this window, each in -1/0/+1.
+
+        Units: latency sequences are per-request **seconds** observed in
+        the window; backlogs are request **counts**; ``decompress_util``,
+        ``kv_page_util`` are dimensionless fractions in [0, 1];
+        ``fabric_lag_s`` is **seconds**.
 
         ``decompress_util`` is the decode tier's window-fraction spent
         dequantizing compressed KV handoffs (0 when the fabric ships raw
@@ -263,7 +288,12 @@ class JointAutoscaler:
         extends past the window end — the wire-saturation signal that
         gates the compression axis: a bound adaptive policy's ceiling is
         raised (instead of a trade) only when the wire is actually the
-        pressure, and relaxed only in windows where it is quiet."""
+        pressure, and relaxed only in windows where it is quiet.
+
+        ``kv_page_util`` is the worst decode replica's unified-pool page
+        utilization (0 for non-paged engines): above
+        :attr:`JointAutoscalerConfig.page_hot_util` the decode tier is
+        memory-pressured — hot regardless of latency, and never cold."""
         cfg = self.cfg
         ttft_p95 = self._p95(ttfts)
         tpot_p95 = self._p95(tpots)
@@ -280,7 +310,8 @@ class JointAutoscaler:
         starved = not ttfts and decode_backlog > 0
         dec_hot = (starved or tpot_p95 > self.slo.tpot_p95
                    or dwait_p95 > dec_slo
-                   or decode_backlog > cfg.backlog_per_replica * n_decode)
+                   or decode_backlog > cfg.backlog_per_replica * n_decode
+                   or kv_page_util > cfg.page_hot_util)
         dec_cold = (not dec_hot and bool(ttfts)
                     and dwait_p95 < cfg.down_fraction * dec_slo
                     and tpot_p95 <= cfg.down_fraction * min(self.slo.tpot_p95,
@@ -348,7 +379,7 @@ class JointAutoscaler:
             decompress_util=decompress_util, d_comp=d_comp,
             comp_ceiling=(self.comp_policy.ceiling_mode
                           if self.comp_policy is not None else None),
-            fabric_lag_s=fabric_lag_s))
+            fabric_lag_s=fabric_lag_s, kv_page_util=kv_page_util))
         return d_pre, d_dec
 
 
@@ -449,11 +480,20 @@ def run_joint_autoscaled(fleet: Fleet, requests: Sequence[Request],
             + sum(1 for r in eng.waiting if r.ready_time <= t)
             for eng in fleet.engines)
         n_dec_active = len(fleet._active_idxs())
+        # unified paging: the worst active replica's page pressure (0 for
+        # non-paged engines) — admissions block on pages, so this sees a
+        # memory bottleneck latency percentiles can miss
+        kv_page_util = max(
+            (1.0 - fleet.engines[k].pool.free_pages
+             / fleet.engines[k].pool.total_pages
+             for k in fleet._active_idxs()
+             if fleet.engines[k].pool is not None), default=0.0)
         d_pre, d_dec = autoscaler.decide(
             t, ttfts, tpots, dwaits, pre_lags, tier.n_active,
             n_dec_active, prefill_backlog, decode_backlog,
             decompress_util=decomp_total / (dt * max(n_dec_active, 1)),
-            fabric_lag_s=max(0.0, tier.fabric.free_at - t))
+            fabric_lag_s=max(0.0, tier.fabric.free_at - t),
+            kv_page_util=kv_page_util)
         if d_dec < 0:
             fleet.retire_replica(fleet._active_idxs()[-1])
             budget.release("decode")

@@ -21,7 +21,8 @@ from typing import Dict, List, Optional, Sequence
 
 from .adapter_cache import AdapterCache, CacheConfig
 from .request import Request, ServeStats
-from .resources import merge_mode_dict
+from .resources import (PAGE_TOKENS, PagedPool, PagedPoolConfig,
+                        merge_mode_dict)
 from .scheduler import Scheduler, SchedulerConfig
 
 
@@ -70,6 +71,22 @@ class ModelFootprint:
             jd_sigma_bytes_per_adapter=2 * sig * cfg.num_layers,
             n_clusters=n_clusters,
             kv_bytes_per_token=2 * 2 * cfg.num_layers * cfg.num_kv_heads * hd)
+
+    def pool_config(self, total_bytes: float,
+                    adapter_share: Optional[float] = None) -> PagedPoolConfig:
+        """The unified paged pool sized for this model: one page is one
+        :data:`PAGE_TOKENS`-token KV block across all layers/heads.
+        `total_bytes` is the HBM region shared by KV blocks and adapter
+        weights (e.g. ``hw.hbm_bytes * hw.mem_cap_frac`` minus the base
+        weights); `adapter_share` carves the pre-paging static split out
+        of the same machinery (see :class:`PagedPoolConfig
+        <repro.serving.resources.PagedPoolConfig>`)."""
+        if self.kv_bytes_per_token <= 0:
+            raise ValueError("pool_config needs kv_bytes_per_token > 0")
+        return PagedPoolConfig(
+            total_bytes=total_bytes,
+            page_bytes=self.kv_bytes_per_token * PAGE_TOKENS,
+            adapter_share=adapter_share)
 
 
 class CostModelExecutor:
@@ -130,6 +147,12 @@ class EngineConfig:
     # router-fed queue depth (every request already known to the engine),
     # so bursts warm proportionally more adapters ahead of admission
     prefetch_depth: Optional[int] = None
+    # unified paging (PR 6): when set, adapter weights and KV blocks share
+    # ONE paged HBM pool — KV pages are reserved (worst case) at admission
+    # and adapter eviction funds decode pages and vice versa;
+    # ``adapter_budget_bytes`` is ignored.  None = legacy static split,
+    # bit-exact with the pre-paging engine.
+    pool: Optional[PagedPoolConfig] = None
 
 
 class ServingEngine:
@@ -140,7 +163,17 @@ class ServingEngine:
         self.cfg = cfg
         self.executor = executor
         self.scheduler = Scheduler(cfg.scheduler, cluster_of)
-        self.cache = AdapterCache(CacheConfig(cfg.adapter_budget_bytes))
+        self.pool: Optional[PagedPool] = None
+        if cfg.pool is not None:
+            fp = getattr(executor, "fp", None)
+            if fp is None or fp.kv_bytes_per_token <= 0:
+                raise ValueError("a paged engine needs an executor with a "
+                                 "ModelFootprint (kv_bytes_per_token > 0)")
+            self.pool = PagedPool(cfg.pool)
+            self.pool.set_reclaimer(
+                lambda n: self.cache.reclaim(n, self._protected()))
+        self.cache = AdapterCache(CacheConfig(cfg.adapter_budget_bytes),
+                                  pool=self.pool)
         if cfg.mode == "jd":
             self.cache.pin_shared(executor.shared_bytes())
         self.clock = 0.0
@@ -148,6 +181,52 @@ class ServingEngine:
         self.running: List[Request] = []
         self.waiting: List[Request] = []
         self.on_finish = None        # optional callback(req) on completion
+        self._kv_held: Dict[int, int] = {}   # rid -> reserved KV pages
+        self._admitting: Optional[int] = None  # adapter id mid-reservation
+        self._page_blocked = False   # last _admit deferred a ready request
+
+    # -- unified paging helpers ---------------------------------------------
+    def _protected(self) -> set:
+        """Adapter ids a reclaim must not evict: the running batch's, plus
+        the adapter of the request being admitted right now."""
+        prot = {r.adapter_id for r in self.running}
+        if self._admitting is not None:
+            prot.add(self._admitting)
+        return prot
+
+    def _kv_pages(self, req: Request) -> int:
+        """Worst-case KV pages for `req`, reserved up front at admission so
+        decode never fails mid-request (a spec decision — see
+        docs/architecture.md)."""
+        tokens = req.prompt_len + req.max_new_tokens
+        return self.pool.pages_for(tokens * self.executor.fp.kv_bytes_per_token)
+
+    def _reserve(self, req: Request, pending_adapter_pages: int
+                 ) -> Optional[int]:
+        """Try to fund `req`'s admission from the pool: its worst-case KV
+        pages (reclaiming cold adapters if needed) AND, if its adapter is
+        not resident, the adapter's pages.  `pending_adapter_pages` counts
+        adapters of requests admitted earlier in the same round whose load
+        has not been issued yet, so one round cannot overcommit.  Returns
+        the adapter pages this request will add (0 if resident), or None
+        when it cannot fit even after evicting every unprotected adapter
+        (the request stays waiting)."""
+        kv_need = self._kv_pages(req)
+        a_need = (0 if self.cache.is_resident(req.adapter_id) else
+                  self.pool.pages_for(
+                      self.executor.adapter_bytes(req.adapter_id)))
+        self._admitting = req.adapter_id
+        try:
+            if not self.pool.feasible(
+                    kv_need, a_need + pending_adapter_pages,
+                    self.cache.evictable_pages(self._protected())):
+                return None
+            if not self.pool.alloc_with_reclaim("kv", kv_need):
+                return None          # unreachable given feasible(); belt
+            self._kv_held[req.rid] = kv_need
+            return a_need
+        finally:
+            self._admitting = None
 
     def submit(self, reqs: Sequence[Request]) -> None:
         self.waiting.extend(reqs)
@@ -156,7 +235,21 @@ class ServingEngine:
     def _admit(self) -> None:
         admitted = self.scheduler.admit(self.running, self.waiting,
                                         self.cache.resident_ids, self.clock)
+        pending_adapter_pages = 0
+        self._page_blocked = False
         for r in admitted:
+            if self.pool is not None:
+                a_need = self._reserve(r, pending_adapter_pages)
+                if a_need is None:
+                    # stays waiting; retried when pages free up (a finished
+                    # decode or an adapter eviction)
+                    self.stats.n_page_blocked += 1
+                    self._page_blocked = True
+                    continue
+                if r.prefilled:
+                    # disagg: the adapter load is issued in step(); account
+                    # for it so this round cannot overcommit the pool
+                    pending_adapter_pages += a_need
             self.waiting.remove(r)
             if r.start_time is None:     # disagg requests keep prefill start
                 r.start_time = self.clock
@@ -166,7 +259,8 @@ class ServingEngine:
                 t_ready = self.cache.ensure(
                     r.adapter_id,
                     self.executor.adapter_bytes(r.adapter_id),
-                    self.clock)
+                    self.clock,
+                    protected=self._protected() | {r.adapter_id})
                 stall = max(0.0, t_ready - self.clock)
                 t_pre = self.executor.prefill_time(r)
                 self.clock += stall + t_pre
@@ -216,15 +310,26 @@ class ServingEngine:
             self.clock = max(self.clock, self.waiting[0].ready_time)
         self._admit()
         if not self.running:
+            if self.pool is not None and self._page_blocked:
+                # an empty engine has every KV page free and every adapter
+                # evictable — if the head request STILL cannot be funded it
+                # never will be, and retrying would spin the clock forever
+                raise MemoryError(
+                    f"paged pool cannot fit a single request: "
+                    f"{self.pool.to_dict()}")
             return True
         # ensure all batch adapters resident (overlapped DMA; stall on max)
+        batch_ids = {r.adapter_id for r in self.running}
         t_ready = self.clock
         for r in self.running:
             t_ready = max(t_ready, self.cache.ensure(
                 r.adapter_id, self.executor.adapter_bytes(r.adapter_id),
-                self.clock))
+                self.clock, protected=batch_ids))
         stall = max(0.0, t_ready - self.clock)
         self._prefetch_waiting()
+        self.stats.peak_batch = max(self.stats.peak_batch, len(self.running))
+        self.stats.peak_resident_adapters = max(
+            self.stats.peak_resident_adapters, len(self.cache.resident_ids))
         t_step = self.executor.decode_step_time(self.running)
         self.clock += stall + t_step
         self.stats.swap_time += stall
@@ -236,6 +341,8 @@ class ServingEngine:
                 r.first_token_time = self.clock
             if r.done:
                 r.finish_time = self.clock
+                if self.pool is not None:   # release the KV reservation
+                    self.pool.free("kv", self._kv_held.pop(r.rid, 0))
                 self.stats.record_finish(r)
                 if self.on_finish is not None:
                     self.on_finish(r)
@@ -248,4 +355,9 @@ class ServingEngine:
             steps += 1
         self.stats.wall_time = self.clock
         self.stats.n_swaps = self.cache.n_swaps
+        if self.pool is not None:
+            self.stats.peak_kv_pages = self.pool.peak["kv"]
+            self.stats.peak_adapter_pages = self.pool.peak["adapter"]
+            self.stats.n_page_reclaims = self.pool.n_reclaims
+            self.stats.pages_reclaimed = self.pool.pages_reclaimed
         return self.stats

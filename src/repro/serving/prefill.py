@@ -38,8 +38,8 @@ from typing import Dict, List, Optional, Sequence
 
 from .adapter_cache import AdapterCache, CacheConfig
 from .request import Request
-from .resources import (FabricConfig, FabricStats, KVFabric,
-                        kv_bytes_per_token, merge_mode_dict)
+from .resources import (FabricConfig, FabricStats, KVFabric, PagedPool,
+                        PagedPoolConfig, kv_bytes_per_token, merge_mode_dict)
 from .scheduler import Scheduler, SchedulerConfig
 
 
@@ -71,6 +71,11 @@ class PrefillConfig:
     # when None, the tier's fabric is derived from `link` (aggregate
     # bandwidth = one link's worth, serial chunks)
     fabric: Optional[FabricConfig] = None
+    # unified paging: when set, each worker's adapter cache allocates whole
+    # pages from its own PagedPool (same allocator as decode replicas —
+    # prefill holds no decode KV, so only adapter/pinned pages are used);
+    # None keeps the legacy byte-budget cache
+    pool: Optional[PagedPoolConfig] = None
 
     def fabric_config(self) -> FabricConfig:
         return self.fabric or FabricConfig(bandwidth=self.link.bandwidth,
@@ -166,7 +171,9 @@ class PrefillWorker:
         self.executor = executor
         self.scheduler = Scheduler(SchedulerConfig(max_batch=cfg.max_batch),
                                    cluster_of)
-        self.cache = AdapterCache(CacheConfig(cfg.adapter_budget_bytes))
+        self.pool = None if cfg.pool is None else PagedPool(cfg.pool)
+        self.cache = AdapterCache(CacheConfig(cfg.adapter_budget_bytes),
+                                  pool=self.pool)
         if cfg.mode == "jd":
             self.cache.pin_shared(executor.shared_bytes())
         self.fabric = fabric or KVFabric(cfg.fabric_config())

@@ -120,6 +120,15 @@ class ServeStats:
     latencies: List[float] = dataclasses.field(default_factory=list)
     ttfts: List[float] = dataclasses.field(default_factory=list)
     tpots: List[float] = dataclasses.field(default_factory=list)
+    # unified paging (engines with a PagedPool; all zero otherwise).
+    # Counters are in PAGES except the two peaks marked otherwise.
+    peak_kv_pages: int = 0           # high-water decode KV reservation
+    peak_adapter_pages: int = 0      # high-water adapter-weight footprint
+    peak_resident_adapters: int = 0  # count of cache-resident adapters
+    peak_batch: int = 0              # count of concurrent decode slots used
+    n_page_reclaims: int = 0         # KV-pressure adapter-eviction rounds
+    pages_reclaimed: int = 0         # adapter pages evicted to fund KV
+    n_page_blocked: int = 0          # admissions deferred for lack of pages
 
     def record_finish(self, req: Request) -> None:
         self.n_requests += 1
@@ -172,6 +181,16 @@ class ServeStats:
             out.latencies.extend(s.latencies)
             out.ttfts.extend(s.ttfts)
             out.tpots.extend(s.tpots)
+            # peaks keep the worst single replica; counters are additive
+            out.peak_kv_pages = max(out.peak_kv_pages, s.peak_kv_pages)
+            out.peak_adapter_pages = max(out.peak_adapter_pages,
+                                         s.peak_adapter_pages)
+            out.peak_resident_adapters = max(out.peak_resident_adapters,
+                                             s.peak_resident_adapters)
+            out.peak_batch = max(out.peak_batch, s.peak_batch)
+            out.n_page_reclaims += s.n_page_reclaims
+            out.pages_reclaimed += s.pages_reclaimed
+            out.n_page_blocked += s.n_page_blocked
         return out
 
     def to_dict(self):
@@ -193,4 +212,11 @@ class ServeStats:
             "tpot_p50_s": self.tpot_pct(50),
             "tpot_p95_s": self.tpot_pct(95),
             "tpot_p99_s": self.tpot_pct(99),
+            "peak_kv_pages": self.peak_kv_pages,
+            "peak_adapter_pages": self.peak_adapter_pages,
+            "peak_resident_adapters": self.peak_resident_adapters,
+            "peak_batch": self.peak_batch,
+            "n_page_reclaims": self.n_page_reclaims,
+            "pages_reclaimed": self.pages_reclaimed,
+            "n_page_blocked": self.n_page_blocked,
         }

@@ -93,14 +93,25 @@ def serving_footprint(model_cfg, mode: str, n_adapters: int,
 def build_engine(model_cfg, mode: str, n_adapters: int, budget: float,
                  hw: ServingHardware, cluster_of: Dict[int, int],
                  setting: Dict, max_batch: int = 32,
-                 prefetch: bool = False) -> ServingEngine:
-    """One cost-model decode replica (also the autoscaler's engine factory)."""
+                 prefetch: bool = False,
+                 pool_bytes: Optional[float] = None,
+                 pool_adapter_share: Optional[float] = None) -> ServingEngine:
+    """One cost-model decode replica (also the autoscaler's engine factory).
+
+    With `pool_bytes` the replica runs unified paging: adapter weights and
+    KV blocks share one paged HBM region of that many bytes
+    (`pool_adapter_share` carves the static-split baseline out of the same
+    machinery); `budget` is then ignored.  Without it, the legacy
+    byte-budget adapter cache is used, bit-exact with the pre-paging
+    engine."""
     fp = serving_footprint(model_cfg, mode, n_adapters, setting)
     ex = CostModelExecutor(hw, fp, mode, cluster_of)
+    pool = (None if pool_bytes is None else
+            fp.pool_config(pool_bytes, adapter_share=pool_adapter_share))
     return ServingEngine(
         EngineConfig(scheduler=SchedulerConfig(max_batch=max_batch),
                      adapter_budget_bytes=budget, mode=mode,
-                     prefetch=prefetch),
+                     prefetch=prefetch, pool=pool),
         ex, cluster_of)
 
 
@@ -135,14 +146,20 @@ def build_fleet(model_cfg, mode: str, n_adapters: int, budget: float,
                 fleet_cfg: FleetConfig, hw: ServingHardware,
                 cluster_of: Dict[int, int], setting: Dict,
                 max_batch: int = 32, prefetch: bool = False,
-                prefill_cfg: Optional[PrefillConfig] = None) -> Fleet:
+                prefill_cfg: Optional[PrefillConfig] = None,
+                pool_bytes: Optional[float] = None,
+                pool_adapter_share: Optional[float] = None) -> Fleet:
     """N identical replicas of the cost-model engine for `mode`.
 
     Budget is per replica (each replica owns an HBM adapter region).  With
     `prefill_cfg` the fleet is disaggregated: a prefill tier (own workers,
-    caches, and KV transfer link) feeds the decode replicas."""
+    caches, and KV transfer link) feeds the decode replicas.  With
+    `pool_bytes` each decode replica runs unified paging (see
+    :func:`build_engine`)."""
     engines = [build_engine(model_cfg, mode, n_adapters, budget, hw,
-                            cluster_of, setting, max_batch, prefetch)
+                            cluster_of, setting, max_batch, prefetch,
+                            pool_bytes=pool_bytes,
+                            pool_adapter_share=pool_adapter_share)
                for _ in range(fleet_cfg.n_replicas)]
     tier = None
     if prefill_cfg is not None:
@@ -162,7 +179,9 @@ def run_elastic_study(model_cfg, mode: str, n_adapters: int,
                       autoscaler_cfg: Optional[AutoscalerConfig] = None,
                       slo: Optional[SLOConfig] = None,
                       budget_cfg: Optional[BudgetConfig] = None,
-                      joint_cfg: Optional[JointAutoscalerConfig] = None
+                      joint_cfg: Optional[JointAutoscalerConfig] = None,
+                      pool_bytes: Optional[float] = None,
+                      pool_adapter_share: Optional[float] = None
                       ) -> FleetStats:
     """One serving cell, optionally disaggregated and/or autoscaled.
 
@@ -183,6 +202,9 @@ def run_elastic_study(model_cfg, mode: str, n_adapters: int,
     jointly autoscaled run additionally drives the policy's mode ceiling
     (raised under budget-exhausted wire pressure before any replica
     trade, relaxed in quiet windows — see ``JointScaleDecision.d_comp``).
+    With `pool_bytes` every decode replica (including ones the autoscaler
+    adds) runs unified paging over a pool of that size;
+    `pool_adapter_share` selects the static-split baseline.
     Returns merged :class:`FleetStats` (``stats.autoscaler`` holds the
     decision history when autoscaled; the prefill dict carries per-mode
     wire-byte totals)."""
@@ -191,11 +213,14 @@ def run_elastic_study(model_cfg, mode: str, n_adapters: int,
         model_cfg, n_adapters, cluster_assign_seed)
     fleet = build_fleet(model_cfg, mode, n_adapters, budget, fleet_cfg, hw,
                         cluster_of, setting, max_batch,
-                        prefill_cfg=prefill_cfg)
+                        prefill_cfg=prefill_cfg, pool_bytes=pool_bytes,
+                        pool_adapter_share=pool_adapter_share)
 
     def decode_factory() -> ServingEngine:
         return build_engine(model_cfg, mode, n_adapters, budget, hw,
-                            cluster_of, setting, max_batch)
+                            cluster_of, setting, max_batch,
+                            pool_bytes=pool_bytes,
+                            pool_adapter_share=pool_adapter_share)
 
     if budget_cfg is not None:
         if prefill_cfg is None:

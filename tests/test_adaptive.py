@@ -9,7 +9,7 @@ import pytest
 from repro.serving.adapter_cache import AdapterCache, CacheConfig, DMAModel
 from repro.serving.autoscaler import (JointAutoscaler, JointAutoscalerConfig,
                                       SLOConfig)
-from repro.serving.prefill import PrefillConfig, PrefillWorker
+from repro.serving.prefill import PrefillConfig, PrefillTier, PrefillWorker
 from repro.serving.request import Request
 from repro.serving.resources import (AdaptiveCompressionConfig,
                                      AdaptiveCompressionPolicy, BudgetConfig,
@@ -161,6 +161,64 @@ def test_raw_locked_policy_bit_exact_with_compression_none():
     assert outs[0] == outs[1] == outs[2]
     assert outs[0][1] == 0.0
     assert outs[0][2].wire_bytes_by_mode == {"raw": 3000}
+
+
+def test_backlog_estimate_is_causal():
+    """`backlog_seconds(at)` counts only pending transfers already ready at
+    `at`.  The tier simulates workers eagerly, so *future* handoffs
+    (``ready_at > at``) can sit in ``_pending`` when a transfer is planned
+    — a live controller could not see those, and the estimate must not."""
+    fab = KVFabric(FabricConfig(bandwidth=100.0, latency=0.1, chunk_bytes=0))
+    now, future = _reqs(2)
+    fab.request(now, 0.0, 1000, comp=None)       # 10 s wire + 0.1 s latency
+    fab.request(future, 50.0, 1000, comp=None)   # does not exist yet at t=1
+    assert fab.backlog_seconds(1.0) == pytest.approx(10.1)
+    assert fab.backlog_seconds(50.0) == pytest.approx(20.2)
+    # after resolve the horizon carries through free_at, not _pending
+    fab.resolve()
+    assert fab._pending == []
+    assert fab.backlog_seconds(fab.free_at - 1.0) == pytest.approx(1.0)
+    assert fab.backlog_seconds(fab.free_at + 1.0) == 0.0
+
+
+def test_adaptive_decision_ignores_future_transfers():
+    """A transfer planned at t=0 must ship raw on an idle channel even if a
+    future handoff was recorded first (the pre-fix estimate peeked at it
+    and escalated off traffic that did not exist yet)."""
+    fab = KVFabric(FabricConfig(
+        bandwidth=100.0, latency=0.0,
+        adaptive=AdaptiveCompressionConfig(escalate_backlog_s=(5.0, 15.0),
+                                           min_dwell=1)))
+    r_future, r_now = _reqs(2)
+    fab.request(r_future, 100.0, 1000)   # 10 s of wire, but only at t=100
+    fab.request(r_now, 0.0, 1000)        # causal backlog at t=0 is zero
+    fab.resolve()
+    assert r_now.wire_mode == "raw"
+    assert r_now.kv_compression is None
+
+
+def test_raw_locked_tier_bit_exact_with_future_transfers_pending():
+    """Regression for the causal-backlog fix at tier scope: two eager
+    workers record handoffs out of order (future ``ready_at`` visible in
+    ``_pending``), and a raw-locked ladder must still reproduce the
+    ``compression=None`` fabric bit-exactly — the raw path never consults
+    the backlog estimate."""
+    def run(fab_cfg):
+        cfg = PrefillConfig(n_workers=2, fabric=fab_cfg)
+        tier = PrefillTier(cfg, [_worker(cfg), _worker(cfg)])
+        reqs = _reqs(6, arrivals=[0.0, 0.0, 2.0, 2.0, 9.0, 9.0])
+        tier.submit(reqs)
+        tier.drain()
+        return ([(r.prefill_done_time, r.decode_ready_time,
+                  r.kv_landed_time, r.transfer_time, r.kv_raw_bytes,
+                  r.kv_wire_bytes, r.kv_compression, r.kv_decompress_cost)
+                 for r in reqs], tier.fabric.stats)
+    plain = run(FabricConfig(bandwidth=100.0, latency=0.1, chunk_bytes=300))
+    locked = run(FabricConfig(bandwidth=100.0, latency=0.1, chunk_bytes=300,
+                              adaptive=AdaptiveCompressionConfig(
+                                  modes=("raw",))))
+    assert plain == locked
+    assert plain[1].wire_bytes_by_mode == {"raw": 6000}
 
 
 def test_per_request_mode_stamps_match_per_mode_stats():

@@ -1,0 +1,508 @@
+"""Unified paging (PR 6): PagedPool invariants, pooled engine behavior, the
+Zipf skew-shift acceptance comparison, the autoscaler page signal, and the
+gathered-page Pallas decode kernel vs the contiguous oracle.
+
+The allocator invariants asserted here (I1-I5) are the ones documented in
+docs/architecture.md — keep the two in sync.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.adapter_cache import AdapterCache, CacheConfig
+from repro.serving.autoscaler import JointAutoscaler, JointAutoscalerConfig, SLOConfig
+from repro.serving.engine import (
+    CostModelExecutor,
+    EngineConfig,
+    ModelFootprint,
+    ServingEngine,
+    ServingHardware,
+)
+from repro.serving.request import Request
+from repro.serving.resources import (
+    PAGE_TOKENS,
+    BudgetConfig,
+    HardwareBudget,
+    PagedPool,
+    PagedPoolConfig,
+)
+from repro.serving.scheduler import SchedulerConfig
+
+
+def make_pool(total_pages=16, page_bytes=100, adapter_share=None):
+    return PagedPool(PagedPoolConfig(total_bytes=float(total_pages * page_bytes),
+                                     page_bytes=page_bytes,
+                                     adapter_share=adapter_share))
+
+
+def conserved(pool):
+    """Invariant I1: free + sum(used) == total after every operation."""
+    return pool.free_pages + sum(pool.used.values()) == pool.total_pages
+
+
+# ---------------------------------------------------------------------------
+# allocator invariants
+# ---------------------------------------------------------------------------
+
+
+class TestPagedPool:
+    def test_conservation_through_alloc_free(self):            # I1
+        pool = make_pool(16)
+        pool.alloc("kv", 5)
+        assert conserved(pool)
+        pool.alloc("adapter", 4)
+        pool.alloc("pinned", 2)
+        assert conserved(pool) and pool.free_pages == 5
+        pool.free("kv", 3)
+        pool.free("adapter", 4)
+        assert conserved(pool) and pool.free_pages == 12
+
+    def test_free_underflow_raises(self):                      # I2
+        pool = make_pool(8)
+        pool.alloc("kv", 2)
+        with pytest.raises(ValueError):
+            pool.free("kv", 3)
+        with pytest.raises(ValueError):
+            pool.free("adapter", 1)
+        assert conserved(pool)
+
+    def test_no_overcommit(self):                              # I3
+        pool = make_pool(8)
+        pool.alloc("kv", 8)
+        assert not pool.can_alloc("adapter", 1)
+        assert not pool.try_alloc("kv", 1)
+        with pytest.raises(MemoryError):
+            pool.alloc("adapter", 1)
+        assert pool.free_pages == 0 and conserved(pool)
+
+    def test_unknown_kind_rejected(self):
+        pool = make_pool(8)
+        with pytest.raises(ValueError):
+            pool.alloc("weights", 1)
+
+    def test_pages_for_rounds_up(self):
+        pool = make_pool(8, page_bytes=100)
+        assert pool.pages_for(0) == 0
+        assert pool.pages_for(1) == 1
+        assert pool.pages_for(100) == 1
+        assert pool.pages_for(101) == 2
+
+    def test_reclaim_takes_only_adapter_pages(self):           # I4
+        pool = make_pool(10)
+        pool.alloc("kv", 3)
+        pool.alloc("pinned", 3)
+        pool.alloc("adapter", 4)
+        calls = []
+
+        def reclaimer(n):
+            calls.append(n)
+            pool.free("adapter", n)
+            return n
+
+        pool.set_reclaimer(reclaimer)
+        assert pool.alloc_with_reclaim("kv", 2)
+        assert calls == [2]
+        assert pool.used["pinned"] == 3 and pool.used["kv"] == 5
+        assert pool.n_reclaims == 1 and pool.pages_reclaimed == 2
+        assert conserved(pool)
+        # adapter shortfall never triggers the reclaimer (it IS the evictor)
+        assert not pool.alloc_with_reclaim("adapter", 10)
+        assert len(calls) == 1
+
+    def test_reclaim_shortfall_larger_than_adapters_fails_clean(self):
+        pool = make_pool(10)
+        pool.alloc("kv", 7)
+        pool.alloc("adapter", 1)
+        pool.set_reclaimer(lambda n: (pool.free("adapter", 1), 1)[1])
+        # needs 4, free 2, only 1 adapter page exists -> infeasible, no call
+        assert not pool.alloc_with_reclaim("kv", 4)
+        assert pool.used["adapter"] == 1 and conserved(pool)
+
+    def test_no_fragmentation_after_churn(self):               # I5
+        rng = np.random.default_rng(7)
+        pool = make_pool(64)
+        held = {"kv": [], "adapter": []}
+        for _ in range(500):
+            kind = ("kv", "adapter")[rng.integers(2)]
+            if rng.random() < 0.55:
+                n = int(rng.integers(1, 9))
+                if pool.try_alloc(kind, n):
+                    held[kind].append(n)
+            elif held[kind]:
+                pool.free(kind, held[kind].pop(rng.integers(len(held[kind]))))
+            assert conserved(pool)
+        # pages are fungible: ANY request within the free count succeeds
+        if pool.free_pages > 0:
+            assert pool.try_alloc("kv", pool.free_pages)
+        assert pool.free_pages == 0 and conserved(pool)
+
+    def test_static_split_caps_both_sides(self):
+        pool = make_pool(20, adapter_share=0.4)
+        assert pool.adapter_cap == 8 and pool.kv_cap == 12
+        assert not pool.can_alloc("adapter", 9)
+        pool.alloc("adapter", 8)
+        assert not pool.can_alloc("adapter", 1)
+        pool.alloc("kv", 12)
+        # free pages exist on neither side's ledger: the split wastes them
+        assert pool.free_pages == 0
+        # unified has no such caps
+        uni = make_pool(20)
+        assert uni.adapter_cap == uni.kv_cap == 20
+        uni.alloc("adapter", 15)
+        assert uni.can_alloc("kv", 5)
+
+    def test_feasible_accounts_eviction_and_caps(self):
+        pool = make_pool(10)
+        pool.alloc("kv", 4)
+        pool.alloc("adapter", 4)
+        assert pool.feasible(2, 0, 0)
+        assert not pool.feasible(3, 0, 0)
+        assert pool.feasible(3, 0, 1)          # evicting 1 adapter page funds it
+        assert pool.feasible(6, 0, 4)
+        assert not pool.feasible(7, 0, 4)
+        split = make_pool(10, adapter_share=0.5)
+        split.alloc("kv", 5)
+        # kv side capped: free pages exist but belong to the adapter side
+        assert not split.feasible(1, 0, 0)
+        assert split.feasible(0, 5, 0)
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            PagedPoolConfig(total_bytes=0, page_bytes=10)
+        with pytest.raises(ValueError):
+            PagedPoolConfig(total_bytes=100.0, page_bytes=10, adapter_share=1.0)
+        with pytest.raises(ValueError):
+            PagedPoolConfig(total_bytes=5.0, page_bytes=10)  # < one page
+
+
+# ---------------------------------------------------------------------------
+# pooled adapter cache
+# ---------------------------------------------------------------------------
+
+
+def make_cache(pool, dma_bw=1e12):
+    cfg = CacheConfig(capacity_bytes=0.0)      # ignored in pooled mode
+    cfg.dma.bandwidth = dma_bw
+    return AdapterCache(cfg, pool=pool)
+
+
+class TestPooledAdapterCache:
+    def test_ensure_allocates_and_evicts_pages(self):
+        pool = make_pool(4, page_bytes=100)
+        cache = make_cache(pool)
+        cache.ensure(1, 200, 0.0)              # 2 pages
+        cache.ensure(2, 200, 0.0)              # 2 pages: pool full
+        assert pool.used["adapter"] == 4
+        cache.ensure(3, 200, 0.0)              # evicts LRU (adapter 1)
+        assert pool.used["adapter"] == 4 and conserved(pool)
+        assert cache.resident_ids == {2, 3}
+
+    def test_ensure_never_evicts_protected(self):
+        pool = make_pool(4, page_bytes=100)
+        cache = make_cache(pool)
+        cache.ensure(1, 200, 0.0)
+        cache.ensure(2, 200, 0.0)
+        with pytest.raises(MemoryError):
+            cache.ensure(3, 200, 0.0, protected={1, 2, 3})
+        assert cache.resident_ids == {1, 2}
+
+    def test_pin_shared_takes_pinned_pages(self):
+        pool = make_pool(4, page_bytes=100)
+        cache = make_cache(pool)
+        cache.pin_shared(250)                  # 3 pages
+        assert pool.used["pinned"] == 3
+        with pytest.raises(MemoryError):
+            cache.pin_shared(200)
+
+    def test_prefetch_only_fills_free_pages(self):
+        pool = make_pool(4, page_bytes=100)
+        cache = make_cache(pool)
+        cache.ensure(1, 300, 0.0)              # 3 pages
+        cache.prefetch(2, 200, 0.0)            # needs 2, 1 free: dropped
+        assert not cache.is_resident(2) and pool.used["adapter"] == 3
+        cache.prefetch(3, 100, 0.0)
+        assert cache.is_resident(3) and pool.used["adapter"] == 4
+
+    def test_reclaim_prefers_prefetched_unused_then_lru(self):
+        pool = make_pool(8, page_bytes=100)
+        cache = make_cache(pool)
+        cache.ensure(1, 200, 0.0)              # LRU-coldest demand entry
+        cache.ensure(2, 200, 0.0)
+        cache.prefetch(3, 200, 1.0)            # speculative, never used
+        assert pool.used["adapter"] == 6
+        freed = cache.reclaim(2, protected=set())
+        # the prefetched-but-unused adapter goes first, NOT the LRU demand one
+        assert freed == 2
+        assert not cache.is_resident(3)
+        assert cache.resident_ids == {1, 2}
+        # next round falls back to true LRU
+        assert cache.reclaim(2, protected=set()) == 2
+        assert cache.resident_ids == {2}
+
+    def test_reclaim_respects_protected(self):
+        pool = make_pool(8, page_bytes=100)
+        cache = make_cache(pool)
+        cache.ensure(1, 200, 0.0)
+        cache.ensure(2, 200, 0.0)
+        assert cache.evictable_pages(protected={1}) == 2
+        assert cache.reclaim(8, protected={1}) == 2
+        assert cache.resident_ids == {1}
+
+
+# ---------------------------------------------------------------------------
+# pooled engine
+# ---------------------------------------------------------------------------
+
+
+def make_fp(kv_bytes_per_token=1024, adapter_bytes=None):
+    page = kv_bytes_per_token * PAGE_TOKENS
+    return ModelFootprint(
+        n_active_params=int(1e8), weight_bytes=int(1e9),
+        lora_bytes_per_adapter=(2 * page if adapter_bytes is None
+                                else adapter_bytes),
+        jd_shared_bytes_per_cluster=page, jd_sigma_bytes_per_adapter=64,
+        kv_bytes_per_token=kv_bytes_per_token)
+
+
+def make_engine(fp, total_pages, max_batch=8, adapter_share=None,
+                n_adapters=32, prefetch=False):
+    page_bytes = fp.kv_bytes_per_token * PAGE_TOKENS
+    pool_cfg = fp.pool_config(float(total_pages * page_bytes),
+                              adapter_share=adapter_share)
+    ex = CostModelExecutor(ServingHardware(), fp, "lora")
+    return ServingEngine(
+        EngineConfig(scheduler=SchedulerConfig(max_batch=max_batch),
+                     prefetch=prefetch, pool=pool_cfg), ex)
+
+
+def make_requests(adapter_seq, prompt_len=PAGE_TOKENS,
+                  max_new_tokens=PAGE_TOKENS, dt=1e-3):
+    return [Request(rid=i, adapter_id=a, prompt_len=prompt_len,
+                    max_new_tokens=max_new_tokens, arrival_time=i * dt)
+            for i, a in enumerate(adapter_seq)]
+
+
+class TestPooledEngine:
+    def test_pool_config_page_size(self):
+        fp = make_fp(kv_bytes_per_token=512)
+        cfg = fp.pool_config(1e9)
+        assert cfg.page_bytes == 512 * PAGE_TOKENS
+
+    def test_pool_requires_kv_footprint(self):
+        fp = make_fp()
+        bad = ModelFootprint(n_active_params=1, weight_bytes=1,
+                             lora_bytes_per_adapter=1,
+                             jd_shared_bytes_per_cluster=1,
+                             jd_sigma_bytes_per_adapter=1)
+        with pytest.raises(ValueError):
+            bad.pool_config(1e9)
+        ex = CostModelExecutor(ServingHardware(), bad, "lora")
+        with pytest.raises(ValueError):
+            ServingEngine(EngineConfig(pool=fp.pool_config(1e9)), ex)
+
+    def test_all_kv_pages_released_at_drain(self):
+        fp = make_fp()
+        eng = make_engine(fp, total_pages=40)
+        eng.submit(make_requests([i % 5 for i in range(30)]))
+        stats = eng.run()
+        assert stats.n_requests == 30
+        assert eng.pool.used["kv"] == 0
+        assert conserved(eng.pool)
+        assert stats.peak_kv_pages > 0
+
+    def test_exhaustion_under_mixed_pressure_serializes(self):
+        # pool fits ONE request's worst-case KV (2 pages) + its adapter
+        # (2 pages): admissions must serialize instead of deadlocking
+        fp = make_fp()
+        eng = make_engine(fp, total_pages=4, max_batch=8)
+        eng.submit(make_requests([0, 1, 2, 3]))
+        stats = eng.run()
+        assert stats.n_requests == 4
+        assert stats.peak_batch == 1           # pages, not slots, bound it
+        assert stats.n_page_blocked > 0
+        assert eng.pool.used["kv"] == 0 and conserved(eng.pool)
+
+    def test_too_small_pool_raises_not_livelocks(self):
+        fp = make_fp()
+        eng = make_engine(fp, total_pages=2)   # KV alone needs 2, adapter 2
+        eng.submit(make_requests([0]))
+        with pytest.raises(MemoryError):
+            eng.run()
+
+    def test_kv_pressure_evicts_prefetched_unused_adapter(self):
+        # one running adapter + a prefetched-but-unused one; the next
+        # admission's KV reservation must evict the speculative bytes
+        fp = make_fp()
+        eng = make_engine(fp, total_pages=10, max_batch=2, prefetch=True)
+        # 2 kv + 2 adapter per request; adapter 9's prefetch fills 2 more
+        eng.submit(make_requests([0, 9, 0, 0], dt=1e-4))
+        stats = eng.run()
+        assert stats.n_requests == 4
+        assert stats.pages_reclaimed > 0 or stats.n_page_blocked == 0
+
+    def test_adapter_eviction_funds_decode_pages(self):
+        # phase 1 warms six adapters with tiny (1-KV-page) requests so 12 of
+        # 16 pages hold adapter weights; phase 2 is KV-heavy on ONE adapter —
+        # its reservations must reclaim the cold adapters' pages
+        fp = make_fp()
+        eng = make_engine(fp, total_pages=16, max_batch=4)
+        warm = make_requests([0, 1, 2, 3, 4, 5], prompt_len=32,
+                             max_new_tokens=32)
+        heavy = [Request(rid=100 + i, adapter_id=0,
+                         prompt_len=2 * PAGE_TOKENS,
+                         max_new_tokens=2 * PAGE_TOKENS,
+                         arrival_time=1.0 + i * 1e-4) for i in range(8)]
+        eng.submit(warm + heavy)
+        stats = eng.run()
+        assert stats.n_requests == len(warm) + len(heavy)
+        assert stats.peak_resident_adapters == 6    # warm set all resident
+        assert stats.n_page_reclaims > 0            # KV pressure evicted it
+        assert stats.pages_reclaimed > 0
+        assert eng.pool.used["kv"] == 0 and conserved(eng.pool)
+
+    def test_static_split_is_degenerate_configuration(self):
+        fp = make_fp()
+        eng = make_engine(fp, total_pages=16, adapter_share=0.5)
+        eng.submit(make_requests([i % 8 for i in range(24)]))
+        stats = eng.run()
+        assert stats.n_requests == 24
+        # the adapter side can never exceed its carve-out
+        assert stats.peak_adapter_pages <= eng.pool.adapter_cap
+
+
+# ---------------------------------------------------------------------------
+# acceptance: Zipf(1.0) skew shift — unified beats the static split
+# ---------------------------------------------------------------------------
+
+
+def zipf_requests(n_requests, n_adapters, seed, rank_perm=None, t0=0.0,
+                  alpha=1.0, dt=2e-4):
+    """Zipf(alpha)-popular adapter draws; `rank_perm` remaps which adapter
+    holds which popularity rank (the skew SHIFT between phases)."""
+    rng = np.random.default_rng(seed)
+    p = 1.0 / np.arange(1, n_adapters + 1) ** alpha
+    p /= p.sum()
+    ranks = rng.choice(n_adapters, size=n_requests, p=p)
+    perm = np.arange(n_adapters) if rank_perm is None else rank_perm
+    return [Request(rid=i, adapter_id=int(perm[r]), prompt_len=PAGE_TOKENS,
+                    max_new_tokens=PAGE_TOKENS, arrival_time=t0 + i * dt)
+            for i, r in enumerate(ranks)]
+
+
+class TestSkewShiftAcceptance:
+    def run_cell(self, adapter_share):
+        fp = make_fp()
+        eng = make_engine(fp, total_pages=64, max_batch=8,
+                          adapter_share=adapter_share, n_adapters=32)
+        n, n_adapters = 150, 32
+        phase1 = zipf_requests(n, n_adapters, seed=0)
+        perm = np.random.default_rng(1).permutation(n_adapters)
+        phase2 = zipf_requests(n, n_adapters, seed=2, rank_perm=perm,
+                               t0=phase1[-1].arrival_time + 1e-3)
+        for i, r in enumerate(phase2):
+            r.rid = n + i
+        eng.submit(phase1 + phase2)
+        return eng.run()
+
+    def test_unified_serves_more_resident_adapters_at_equal_slots(self):
+        unified = self.run_cell(adapter_share=None)
+        split = self.run_cell(adapter_share=0.25)
+        # same fixed HBM budget, same decode-slot count actually used...
+        assert unified.n_requests == split.n_requests == 300
+        assert unified.peak_batch >= split.peak_batch
+        # ...and the unified pool kept STRICTLY more adapters cache-resident
+        # (the static split's adapter carve-out caps its working set)
+        assert unified.peak_resident_adapters > split.peak_resident_adapters
+        # because idle decode headroom was lent to the adapter side
+        assert unified.peak_adapter_pages > split.peak_adapter_pages
+        # and it never pays MORE adapter reloads than the split
+        assert unified.n_swaps <= split.n_swaps
+
+
+# ---------------------------------------------------------------------------
+# autoscaler page signal
+# ---------------------------------------------------------------------------
+
+
+class TestAutoscalerPageSignal:
+    def make_scaler(self, total=8):
+        return JointAutoscaler(
+            JointAutoscalerConfig(cooldown_intervals=0),
+            SLOConfig(ttft_p95=0.5),
+            HardwareBudget(BudgetConfig(total_accelerators=total)))
+
+    def comfortable(self):
+        """Latency samples far below every SLO share."""
+        return dict(ttfts=[0.01] * 8, tpots=[0.001] * 8,
+                    decode_waits=[0.01] * 8, prefill_lags=[0.01] * 8,
+                    prefill_backlog=0, decode_backlog=0)
+
+    def test_page_saturation_scales_decode_up(self):
+        sc = self.make_scaler()
+        d_pre, d_dec = sc.decide(1.0, n_prefill=1, n_decode=1,
+                                 kv_page_util=0.95, **self.comfortable())
+        assert (d_pre, d_dec) == (0, 1)
+        assert sc.history[-1].kv_page_util == 0.95
+
+    def test_page_saturation_vetoes_decode_cold(self):
+        sc = self.make_scaler()
+        d_pre, d_dec = sc.decide(1.0, n_prefill=1, n_decode=3,
+                                 kv_page_util=0.95, **self.comfortable())
+        assert d_dec >= 0                      # never retires a full pool
+
+    def test_low_page_util_keeps_legacy_behavior(self):
+        sc = self.make_scaler()
+        d_pre, d_dec = sc.decide(1.0, n_prefill=1, n_decode=3,
+                                 kv_page_util=0.2, **self.comfortable())
+        assert d_dec == -1                     # comfortable tier still shrinks
+
+
+# ---------------------------------------------------------------------------
+# gathered-page kernel vs contiguous oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed,B,Kv,G,hd,n_blocks", [
+    (0, 2, 2, 2, 64, 2),
+    (1, 3, 4, 2, 64, 4),
+    (2, 1, 1, 8, 128, 3),
+])
+def test_paged_decode_bit_exact_with_contiguous(seed, B, Kv, G, hd, n_blocks):
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_decode import flash_decode, flash_decode_paged
+    from repro.kernels.ref import flash_decode_paged_ref, gather_pages_ref
+
+    page_t = 128
+    rng = np.random.default_rng(seed)
+    P = B * n_blocks + 3                       # pool larger than needed
+    H = Kv * G
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, page_t, Kv, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, page_t, Kv, hd)), jnp.float32)
+    # permuted page table: physically scattered, logically contiguous
+    pt = jnp.asarray(rng.permutation(P)[:B * n_blocks].reshape(B, n_blocks),
+                     jnp.int32)
+    kv_len = jnp.asarray(
+        rng.integers(page_t, n_blocks * page_t, size=(B,)), jnp.int32)
+
+    out_p, l_p, m_p = flash_decode_paged(q, kp, vp, pt, kv_len)
+    k = gather_pages_ref(kp, pt)
+    v = gather_pages_ref(vp, pt)
+    out_c, l_c, m_c = flash_decode(q, k, v, kv_len, block_s=page_t)
+    # bit-exact: the paged path runs the SAME kernel body over the same
+    # logical blocks — only the BlockSpec addressing differs
+    assert np.array_equal(np.asarray(out_p), np.asarray(out_c))
+    assert np.array_equal(np.asarray(l_p), np.asarray(l_c))
+    assert np.array_equal(np.asarray(m_p), np.asarray(m_c))
+    ref = flash_decode_paged_ref(q, kp, vp, pt, kv_len)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_page_tokens_matches_quant_block():
+    """The sim's page granularity IS the quant kernels' block granularity
+    (one page = one wire block); the constant is duplicated because the
+    serving sim must import without jax."""
+    from repro.kernels import kv_quant
+
+    assert PAGE_TOKENS == kv_quant.BLOCK_T
