@@ -13,6 +13,19 @@ inline `backtick` spans are parsed.  Tokens that do not look like code
 references (flags, shell fragments, JSON keys, snake_case words) are
 ignored rather than guessed at.
 
+Two spec-sync lanes ride along:
+
+* **Invariant IDs.**  A spec doc (under `docs/`) that names invariants
+  (`I1`/`L4`-style IDs) must agree with the test files it references:
+  every documented ID must be asserted (an `# I1` trailing comment or
+  `Invariant I1:` docstring in a referenced `tests/test_*.py`), and
+  every asserted ID in those files must be documented.  Spec drift fails
+  in both directions.  README may cite invariants in passing without
+  owning the full set, so the lane skips it.
+* **Serving coverage.**  Every public class defined under
+  `src/repro/serving/` must be mentioned (inline span) in at least one
+  checked doc — a public serving API that no doc names is a failure.
+
 Usage:  python scripts/check_docs_refs.py  (exit 1 on any dangling ref)
 """
 from __future__ import annotations
@@ -34,6 +47,12 @@ RE_CLASS = re.compile(r"^[A-Z][A-Za-z0-9]*$")
 RE_CONST = re.compile(r"^[A-Z][A-Z0-9_]{2,}$")
 RE_DEF = re.compile(r"^(?:class|def)\s+(\w+)", re.M)
 RE_CLASS_DEF = re.compile(r"^class\s+(\w+)", re.M)
+# invariant IDs: loose in prose ("I1", "L4"), marker-form in tests
+# (trailing "# L4" comment or "Invariant L4" docstring opener) so test
+# code mentioning e.g. an L2 norm can't inject phantom invariants
+RE_DOC_INV = re.compile(r"\b([IL]\d+)\b")
+RE_TEST_INV = re.compile(r"(?:#\s*|Invariant\s+)([IL]\d+)\b")
+RE_TEST_REF = re.compile(r"\btests/test_\w+\.py")
 
 BUILTINS = set(dir(builtins))
 
@@ -143,6 +162,55 @@ def check_file(md_path, class_files, defined, source_text):
             if not re.search(rf"\b{re.escape(tok)}\b", source_text):
                 errors.append(f"{md_path.name}: dangling constant `{tok}`")
             continue
+    errors.extend(check_invariants(md_path, text))
+    return errors
+
+
+def check_invariants(md_path, text):
+    """Cross-check invariant IDs between a spec doc and the test files it
+    references (both directions: documented-but-unasserted and
+    asserted-but-undocumented are failures).  Only docs/ files own a
+    spec; README cites invariants in passing and is skipped."""
+    if (ROOT / "docs") not in md_path.parents:
+        return []
+    doc_ids = set(RE_DOC_INV.findall(text))
+    if not doc_ids:
+        return []
+    test_ids: set[str] = set()
+    refs = sorted(set(RE_TEST_REF.findall(text)))
+    for ref in refs:
+        path = resolve_path(ref)
+        if path is not None:
+            test_ids.update(RE_TEST_INV.findall(path.read_text()))
+    if not test_ids:
+        return [f"{md_path.name}: names invariants {sorted(doc_ids)} but "
+                f"references no test file asserting any"]
+    errors = []
+    for i in sorted(doc_ids - test_ids):
+        errors.append(f"{md_path.name}: invariant `{i}` documented but "
+                      f"asserted in none of {refs}")
+    for i in sorted(test_ids - doc_ids):
+        errors.append(f"{md_path.name}: invariant `{i}` asserted in "
+                      f"{refs} but missing from the doc")
+    return errors
+
+
+def check_serving_coverage(docs):
+    """Every public class under src/repro/serving/ must be named in at
+    least one checked doc's inline spans."""
+    spans = []
+    for md in docs:
+        spans.extend(RE_SPAN.findall(strip_fences(md.read_text())))
+    span_text = "\n".join(spans)
+    errors = []
+    for py in sorted((ROOT / "src" / "repro" / "serving").glob("*.py")):
+        for cls in RE_CLASS_DEF.findall(py.read_text()):
+            if cls.startswith("_"):
+                continue
+            if not re.search(rf"\b{re.escape(cls)}\b", span_text):
+                errors.append(f"public serving class `{cls}` "
+                              f"({py.relative_to(ROOT)}) appears in no "
+                              f"checked doc")
     return errors
 
 
@@ -160,6 +228,7 @@ def main() -> int:
     for md in docs:
         n_spans += len(RE_SPAN.findall(strip_fences(md.read_text())))
         errors.extend(check_file(md, class_files, defined, source_text))
+    errors.extend(check_serving_coverage(docs))
     for e in errors:
         print(f"[fail] {e}")
     print(f"check_docs_refs: {len(docs)} files, {n_spans} code spans, "

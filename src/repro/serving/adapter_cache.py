@@ -44,7 +44,16 @@ class CacheConfig:
 
 
 class AdapterCache:
-    """LRU over adapter entries + pinned shared entries."""
+    """LRU over adapter entries + pinned shared entries.
+
+    Entries are keyed by adapter id — or, for adapters updated through the
+    online lifecycle, by an ``(adapter_id, epoch)`` tuple
+    (:func:`~repro.serving.request.weight_key`), so two weight versions of
+    one adapter can be resident while the old epoch's in-flight requests
+    drain.  The demand path is :meth:`ensure`; :meth:`prefetch` fills idle
+    capacity in the background; :meth:`reclaim` is the pool's pressure
+    valve; :meth:`discard` and :meth:`repin_shared` are the lifecycle
+    control plane's release/refresh hooks (docs/lifecycle.md)."""
 
     def __init__(self, cfg: CacheConfig, pool: Optional[PagedPool] = None):
         self.cfg = cfg
@@ -96,6 +105,39 @@ class AdapterCache:
                 f"shared bases ({nbytes/1e6:.1f} MB) exceed adapter budget "
                 f"({self.capacity/1e6:.1f} MB)")
         self._pinned_bytes += nbytes
+
+    def repin_shared(self, nbytes: int, now: float) -> float:
+        """Hot-swap the pinned shared-base region (basis refresh/rollback).
+
+        Frees the currently pinned pages/bytes, pins a region of `nbytes`
+        (evicting cold adapters when the new bases need more room than the
+        old ones freed), and queues the transfer on the copy engine exactly
+        like a demand load.  Returns the completion time — the replica
+        must not decode against the new bases before it."""
+        if self.pool is not None:
+            self.pool.free("pinned", self._pages(self._pinned_bytes))
+            self._pinned_bytes = 0
+            need = self._pages(nbytes)
+            while not self.pool.can_alloc("pinned", need) and self._resident:
+                self._evict(next(iter(self._resident)))
+            self.pool.alloc("pinned", need)      # raises if genuinely too big
+        else:
+            self._pinned_bytes = 0
+            while self._used + nbytes > self.capacity and self._resident:
+                evicted, b = self._resident.popitem(last=False)
+                self._inflight_prefetch.pop(evicted, None)
+                self._used -= b
+            if self._used + nbytes > self.capacity:
+                raise MemoryError(
+                    f"refreshed shared bases ({nbytes/1e6:.1f} MB) exceed "
+                    f"adapter budget ({self.capacity/1e6:.1f} MB)")
+        self._pinned_bytes = nbytes
+        start = max(now, self.copy_engine_free_at)
+        t_done = start + self.cfg.dma.latency + nbytes / self.cfg.dma.bandwidth
+        self.copy_engine_free_at = t_done
+        self.n_swaps += 1
+        self.bytes_swapped += nbytes
+        return t_done
 
     # -- lookup / load ------------------------------------------------------
     def is_resident(self, aid: int) -> bool:
@@ -200,6 +242,20 @@ class AdapterCache:
         self._used += nbytes
         self._inflight_prefetch[aid] = t_done
         self.n_prefetches += 1
+
+    def discard(self, key) -> int:
+        """Release a resident entry's bytes/pages outright (retire/update).
+
+        The lifecycle control plane calls this once an adapter (or a stale
+        weight epoch of one) has no in-flight requests left — invariant L5:
+        a retired adapter holds no pool pages after its drain.  Callers are
+        responsible for that drain; the cache does not know the running
+        batch.  Returns the bytes freed (0 if the key was not resident)."""
+        if key not in self._resident:
+            return 0
+        freed = self._resident[key]
+        self._evict(key)
+        return freed
 
     @property
     def resident_ids(self) -> Set[int]:

@@ -202,6 +202,7 @@ class JointScaleDecision:
     comp_ceiling: Optional[str] = None   # ceiling mode after this decision
     fabric_lag_s: float = 0.0        # fabric horizon past the window end
     kv_page_util: float = 0.0        # worst decode replica's page pressure
+    refresh_active: bool = False     # basis-refresh rollout in flight
 
 
 class JointAutoscaler:
@@ -213,6 +214,12 @@ class JointAutoscaler:
     cold (retire + drain there, add here).  Both-hot spends any free
     budget on the tier that is proportionally worse.  At most one
     worker/replica moves per tier per decision.
+
+    Two extra signals refine the classification: ``kv_page_util`` (worst
+    replica's unified-pool occupancy) marks decode hot on page pressure
+    before eviction churn reaches the percentiles, and ``refresh_active``
+    (a basis rollout is walking the fleet) vetoes treating decode as cold
+    — comfortable mid-rollout percentiles are the rollout hiding load.
     """
 
     def __init__(self, cfg: JointAutoscalerConfig, slo: SLOConfig,
@@ -271,7 +278,8 @@ class JointAutoscaler:
                prefill_backlog: int, decode_backlog: int,
                decompress_util: float = 0.0,
                fabric_lag_s: float = 0.0,
-               kv_page_util: float = 0.0) -> Tuple[int, int]:
+               kv_page_util: float = 0.0,
+               refresh_active: bool = False) -> Tuple[int, int]:
         """(prefill delta, decode delta) for this window, each in -1/0/+1.
 
         Units: latency sequences are per-request **seconds** observed in
@@ -293,7 +301,15 @@ class JointAutoscaler:
         ``kv_page_util`` is the worst decode replica's unified-pool page
         utilization (0 for non-paged engines): above
         :attr:`JointAutoscalerConfig.page_hot_util` the decode tier is
-        memory-pressured — hot regardless of latency, and never cold."""
+        memory-pressured — hot regardless of latency, and never cold.
+
+        ``refresh_active`` is the adapter lifecycle's rollout signal: a
+        basis refresh is walking the decode replicas one at a time
+        (``AdapterLifecycle``, docs/lifecycle.md).  It vetoes the cold
+        classification — replicas take turns stalled on base swaps, so a
+        comfortable window percentile is the rollout hiding load, and
+        retiring a replica mid-rollout would churn the replica set the
+        rollout is walking."""
         cfg = self.cfg
         ttft_p95 = self._p95(ttfts)
         tpot_p95 = self._p95(tpots)
@@ -317,7 +333,8 @@ class JointAutoscaler:
                     and tpot_p95 <= cfg.down_fraction * min(self.slo.tpot_p95,
                                                             1e12)
                     and decode_backlog <= n_decode
-                    and decompress_util < cfg.decompress_cold_util)
+                    and decompress_util < cfg.decompress_cold_util
+                    and not refresh_active)
 
         d_pre = d_dec = d_comp = 0
         if self._cooldown > 0:
@@ -379,7 +396,8 @@ class JointAutoscaler:
             decompress_util=decompress_util, d_comp=d_comp,
             comp_ceiling=(self.comp_policy.ceiling_mode
                           if self.comp_policy is not None else None),
-            fabric_lag_s=fabric_lag_s, kv_page_util=kv_page_util))
+            fabric_lag_s=fabric_lag_s, kv_page_util=kv_page_util,
+            refresh_active=refresh_active))
         return d_pre, d_dec
 
 

@@ -20,7 +20,7 @@ from typing import Dict, List, Optional, Sequence
 
 
 from .adapter_cache import AdapterCache, CacheConfig
-from .request import Request, ServeStats
+from .request import Request, ServeStats, weight_key
 from .resources import (PAGE_TOKENS, PagedPool, PagedPoolConfig,
                         merge_mode_dict)
 from .scheduler import Scheduler, SchedulerConfig
@@ -90,15 +90,34 @@ class ModelFootprint:
 
 
 class CostModelExecutor:
-    """Roofline step-time model; decode is weight-streaming bound."""
+    """Roofline step-time model; decode is weight-streaming bound.
+
+    Supports a **raw overlay** for the online lifecycle: adapters in
+    ``raw_ids`` are served through the uncompressed SGMV path even in
+    "jd" mode (a hot-registered adapter decodes from its full A/B weights
+    — :func:`repro.core.collection.export_uncompressed` — until a basis
+    refresh absorbs it into a cluster, invariant L1).  A jd decode step
+    with mixed raw/compressed slots streams each raw adapter's LoRA
+    weights plus the compressed slots' bases and Sigmas.  With
+    ``raw_ids`` empty the model is bit-exact with the pre-lifecycle
+    executor."""
 
     def __init__(self, hw: ServingHardware, fp: ModelFootprint, mode: str,
                  cluster_of: Optional[Dict[int, int]] = None):
         self.hw, self.fp, self.mode = hw, fp, mode
         self.cluster_of = cluster_of or {}
+        self.raw_ids: set = set()
+
+    def mark_raw(self, aid: int) -> None:
+        """Serve `aid` through the uncompressed SGMV path (hot register)."""
+        self.raw_ids.add(aid)
+
+    def unmark_raw(self, aid: int) -> None:
+        """`aid`'s cluster basis now serves it (refresh rollout complete)."""
+        self.raw_ids.discard(aid)
 
     def adapter_bytes(self, aid: int) -> int:
-        if self.mode == "jd":
+        if self.mode == "jd" and aid not in self.raw_ids:
             return self.fp.jd_sigma_bytes_per_adapter
         return self.fp.lora_bytes_per_adapter
 
@@ -115,9 +134,13 @@ class CostModelExecutor:
         t_w = self.fp.weight_bytes / self.hw.hbm_bw
         t_f = 2.0 * self.fp.n_active_params * B / self.hw.peak_flops
         if self.mode == "jd":
-            ucl = {self.cluster_of.get(a, 0) for a in uniq}
+            raw = uniq & self.raw_ids
+            n_raw_slots = sum(1 for r in batch if r.adapter_id in raw)
+            ucl = {self.cluster_of.get(a, 0) for a in uniq - raw}
             extra = (len(ucl) * self.fp.jd_shared_bytes_per_cluster
-                     + B * self.fp.jd_sigma_bytes_per_adapter) / self.hw.hbm_bw
+                     + (B - n_raw_slots) * self.fp.jd_sigma_bytes_per_adapter
+                     + len(raw) * self.fp.lora_bytes_per_adapter
+                     ) / self.hw.hbm_bw
         else:
             extra = (len(uniq) * self.fp.lora_bytes_per_adapter
                      + 0) / self.hw.hbm_bw
@@ -187,9 +210,9 @@ class ServingEngine:
 
     # -- unified paging helpers ---------------------------------------------
     def _protected(self) -> set:
-        """Adapter ids a reclaim must not evict: the running batch's, plus
+        """Weight keys a reclaim must not evict: the running batch's, plus
         the adapter of the request being admitted right now."""
-        prot = {r.adapter_id for r in self.running}
+        prot = {weight_key(r) for r in self.running}
         if self._admitting is not None:
             prot.add(self._admitting)
         return prot
@@ -212,10 +235,10 @@ class ServingEngine:
         when it cannot fit even after evicting every unprotected adapter
         (the request stays waiting)."""
         kv_need = self._kv_pages(req)
-        a_need = (0 if self.cache.is_resident(req.adapter_id) else
+        a_need = (0 if self.cache.is_resident(weight_key(req)) else
                   self.pool.pages_for(
                       self.executor.adapter_bytes(req.adapter_id)))
-        self._admitting = req.adapter_id
+        self._admitting = weight_key(req)
         try:
             if not self.pool.feasible(
                     kv_need, a_need + pending_adapter_pages,
@@ -231,6 +254,20 @@ class ServingEngine:
     def submit(self, reqs: Sequence[Request]) -> None:
         self.waiting.extend(reqs)
         self.waiting.sort(key=lambda r: r.ready_time)
+
+    def refresh_shared(self, nbytes: int, now: float) -> float:
+        """Swap this replica's pinned shared bases for a refreshed set of
+        `nbytes` (one step of a basis-refresh rollout, or its rollback).
+
+        The replica decodes nothing while its bases are in flight — the
+        DMA stalls this clock (charged as swap time), which is exactly why
+        the lifecycle rolls replicas one at a time (invariant L2): the
+        rest of the fleet keeps serving.  Returns the completion time."""
+        self.clock = max(self.clock, now)
+        t_done = self.cache.repin_shared(nbytes, self.clock)
+        self.stats.swap_time += t_done - self.clock
+        self.clock = t_done
+        return t_done
 
     def _admit(self) -> None:
         admitted = self.scheduler.admit(self.running, self.waiting,
@@ -257,10 +294,10 @@ class ServingEngine:
                 # colocated serving: prefill runs inline at admission.
                 # adapter must be resident before prefill
                 t_ready = self.cache.ensure(
-                    r.adapter_id,
+                    weight_key(r),
                     self.executor.adapter_bytes(r.adapter_id),
                     self.clock,
-                    protected=self._protected() | {r.adapter_id})
+                    protected=self._protected() | {weight_key(r)})
                 stall = max(0.0, t_ready - self.clock)
                 t_pre = self.executor.prefill_time(r)
                 self.clock += stall + t_pre
@@ -297,7 +334,7 @@ class ServingEngine:
         for r in self.waiting[:depth]:
             if r.ready_time > self.clock:       # not yet known to the engine
                 break
-            self.cache.prefetch(r.adapter_id,
+            self.cache.prefetch(weight_key(r),
                                 self.executor.adapter_bytes(r.adapter_id),
                                 self.clock)
 
@@ -319,11 +356,11 @@ class ServingEngine:
                     f"{self.pool.to_dict()}")
             return True
         # ensure all batch adapters resident (overlapped DMA; stall on max)
-        batch_ids = {r.adapter_id for r in self.running}
+        batch_ids = {weight_key(r) for r in self.running}
         t_ready = self.clock
         for r in self.running:
             t_ready = max(t_ready, self.cache.ensure(
-                r.adapter_id, self.executor.adapter_bytes(r.adapter_id),
+                weight_key(r), self.executor.adapter_bytes(r.adapter_id),
                 self.clock, protected=batch_ids))
         stall = max(0.0, t_ready - self.clock)
         self._prefetch_waiting()

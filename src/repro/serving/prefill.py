@@ -37,7 +37,7 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence
 
 from .adapter_cache import AdapterCache, CacheConfig
-from .request import Request
+from .request import Request, weight_key
 from .resources import (FabricConfig, FabricStats, KVFabric, PagedPool,
                         PagedPoolConfig, kv_bytes_per_token, merge_mode_dict)
 from .scheduler import Scheduler, SchedulerConfig
@@ -190,6 +190,17 @@ class PrefillWorker:
         self.waiting.extend(reqs)
         self.waiting.sort(key=lambda r: r.arrival_time)
 
+    def refresh_shared(self, nbytes: int, now: float) -> float:
+        """Swap this worker's pinned shared bases (basis-refresh rollout
+        step / rollback) — symmetric with
+        :meth:`repro.serving.engine.ServingEngine.refresh_shared`: the DMA
+        stalls this worker's clock while the rest of the tier serves."""
+        self.clock = max(self.clock, now)
+        t_done = self.cache.repin_shared(nbytes, self.clock)
+        self.stats.swap_time += t_done - self.clock
+        self.clock = t_done
+        return t_done
+
     def _handoff(self, req: Request) -> None:
         """Record the produced KV cache on the fabric (never blocks this
         worker's next prefill); the fabric stamps readiness at resolve.
@@ -230,7 +241,7 @@ class PrefillWorker:
         t_ready = self.clock
         for r in batch:
             t_ready = max(t_ready, self.cache.ensure(
-                r.adapter_id, self.executor.adapter_bytes(r.adapter_id),
+                weight_key(r), self.executor.adapter_bytes(r.adapter_id),
                 self.clock))
         stall = max(0.0, t_ready - self.clock)
         self.clock += stall

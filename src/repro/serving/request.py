@@ -9,6 +9,18 @@ import numpy as np
 from .resources import merge_mode_dict
 
 
+def weight_key(req: "Request"):
+    """Cache key for the adapter weights `req` decodes against.
+
+    Epoch 0 (every request outside the lifecycle) keys by the bare adapter
+    id — bit-exact with pre-lifecycle behavior.  Updated adapters key by
+    ``(adapter_id, epoch)`` so two weight versions can be resident at once
+    while the old epoch's in-flight requests drain (invariant L4)."""
+    if req.adapter_epoch == 0:
+        return req.adapter_id
+    return (req.adapter_id, req.adapter_epoch)
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -16,6 +28,13 @@ class Request:
     prompt_len: int
     max_new_tokens: int
     arrival_time: float = 0.0
+    # online lifecycle (serving/lifecycle.py): which weight epoch of the
+    # adapter this request was routed against.  An update is retire+register
+    # with a bumped epoch; in-flight requests keep decoding against the
+    # epoch they were stamped with (invariant L4, docs/lifecycle.md).
+    # Epoch 0 is the default and keys caches by the bare adapter id, so
+    # request streams that never touch the lifecycle are unchanged.
+    adapter_epoch: int = 0
     # runtime state
     generated: int = 0
     start_time: Optional[float] = None

@@ -53,7 +53,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 from .engine import CostModelExecutor, ServingEngine
 from .prefill import PrefillTier
-from .request import Request, ServeStats
+from .request import Request, ServeStats, weight_key
 
 POLICIES = ("round_robin", "least_outstanding", "adapter_affinity",
             "cluster_affinity")
@@ -87,6 +87,7 @@ class FleetStats:
     autoscaler: Optional[List] = None    # ScaleDecision history if autoscaled
     n_prefill_final: Optional[int] = None    # active prefill workers (joint)
     budget: Optional[Dict] = None        # HardwareBudget.to_dict() (joint)
+    lifecycle: Optional[Dict] = None     # LifecycleStats.to_dict() (churn)
 
     def to_dict(self) -> Dict:
         d = self.total.to_dict()
@@ -102,6 +103,8 @@ class FleetStats:
             d["n_prefill_final"] = self.n_prefill_final
         if self.budget is not None:
             d["budget"] = self.budget
+        if self.lifecycle is not None:
+            d["lifecycle"] = self.lifecycle
         return d
 
 
@@ -110,6 +113,17 @@ class Fleet:
 
     Each replica is an independent :class:`ServingEngine` with its own
     simulated clock; fleet wall time is the slowest replica's clock.
+    :meth:`submit` may be called repeatedly with successive arrival
+    windows (routing state persists), :meth:`advance_to` steps every
+    replica causally to a window boundary, and :meth:`run` drains the
+    fleet and merges per-replica stats.  Membership is elastic
+    (:meth:`add_replica` / :meth:`retire_replica`); sticky affinity state
+    lives in a key -> replica home map that membership changes prune
+    *scoped* (:meth:`rehome`) and the adapter lifecycle drains per key
+    (:meth:`drop_home`).  `cluster_of` — shared with every replica's
+    executor — maps adapter ids to JD clusters for the cluster-affinity
+    policy; the lifecycle control plane mutates it in place when adapters
+    register or retire, and every reader sees the update.
     """
 
     def __init__(self, cfg: FleetConfig, engines: Sequence[ServingEngine],
@@ -142,13 +156,16 @@ class Fleet:
         return [i for i, a in enumerate(self.active) if a]
 
     def add_replica(self, engine: ServingEngine, now: float = 0.0) -> int:
-        """Join a fresh decode replica at simulated time `now`."""
+        """Join a fresh decode replica at simulated time `now`.
+
+        Existing affinity homes stay valid (the new replica holds none), so
+        warm adapters keep their cache locality; the new replica fills up
+        through first sightings and bounded spill."""
         engine.clock = max(engine.clock, now)
         self.engines.append(engine)
         self.active.append(True)
         self._routed_load.append(0.0)
         self.scale_events += 1
-        self.rehome()
         return len(self.engines) - 1
 
     def retire_replica(self, i: int) -> None:
@@ -159,12 +176,29 @@ class Fleet:
             raise ValueError("cannot retire the last active replica")
         self.active[i] = False
         self.scale_events += 1
-        self.rehome()
+        self.rehome(i)
 
-    def rehome(self) -> None:
-        """Drop sticky affinity placements: on the next sighting each
-        adapter/JD-cluster is re-placed against the current active set."""
-        self._home.clear()
+    def rehome(self, replica: Optional[int] = None) -> None:
+        """Drop sticky affinity placements so affected adapters/JD-clusters
+        re-place against the current active set on next sighting.
+
+        Scoped to `replica` when given: only keys homed THERE are dropped —
+        a membership change must not cold-start the cache locality of
+        adapters homed on unrelated replicas (they keep their warm caches).
+        With ``replica=None`` every home is dropped (a full re-shuffle,
+        e.g. after an offline basis rebuild changes cluster_of wholesale)."""
+        if replica is None:
+            self._home.clear()
+            return
+        for key in [k for k, h in self._home.items() if h == replica]:
+            del self._home[key]
+
+    def drop_home(self, key: int) -> None:
+        """Forget the sticky home for one affinity key (an adapter id, or a
+        JD cluster id under ``cluster_affinity``) — the lifecycle's
+        retirement drain uses this so a retired adapter stops pinning
+        placement state (invariant L5)."""
+        self._home.pop(key, None)
 
     # -- live state helpers -------------------------------------------------
     def _advance_to(self, t: float) -> None:
@@ -276,7 +310,7 @@ class Fleet:
                 hint_at = (r.start_time if r.start_time is not None
                            else r.ready_time)
                 eng.cache.prefetch(
-                    r.adapter_id, eng.executor.adapter_bytes(r.adapter_id),
+                    weight_key(r), eng.executor.adapter_bytes(r.adapter_id),
                     hint_at)
             self.engines[i].submit([r])
 

@@ -1,0 +1,521 @@
+"""Online adapter lifecycle tests (serving/lifecycle.py).
+
+The lifecycle invariants asserted here (L1-L5) are specified in
+docs/lifecycle.md; the docs CI lane cross-checks the invariant IDs
+between that spec and this file.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cluster import (add_adapter, assign_adapter,
+                                _assignment_scores, cluster_jd, drop_adapter,
+                                refresh_gate)
+from repro.serving.adapter_cache import AdapterCache, CacheConfig, DMAModel
+from repro.serving.autoscaler import (HardwareBudget, JointAutoscaler,
+                                      JointAutoscalerConfig, SLOConfig)
+from repro.serving.engine import EngineConfig, ServingEngine, ServingHardware
+from repro.serving.lifecycle import (AdapterLifecycle, ChurnSpec,
+                                     CLUSTER_ASSIGNED, GateResult,
+                                     LifecycleConfig, make_churn_workload,
+                                     RAW_SERVING, RETIRED, run_churn_study)
+from repro.serving.request import Request, weight_key
+from repro.serving.resources import BudgetConfig
+from repro.serving.router import Fleet, FleetConfig
+from repro.serving.scheduler import SchedulerConfig
+from repro.serving.simulator import (build_fleet, memory_matched_setup,
+                                     serving_footprint)
+from repro.serving.workload import WorkloadSpec
+
+
+class TinyJDExecutor:
+    """Fixed-cost jd-mode executor with the raw overlay: raw adapters
+    weigh 4 bytes, compressed sigmas 1, shared bases 8."""
+
+    def __init__(self, prefill=1.0, decode=0.5):
+        self._prefill, self._decode = prefill, decode
+        self.raw_ids = set()
+
+    def mark_raw(self, aid):
+        self.raw_ids.add(aid)
+
+    def unmark_raw(self, aid):
+        self.raw_ids.discard(aid)
+
+    def adapter_bytes(self, aid):
+        return 4 if aid in self.raw_ids else 1
+
+    def shared_bytes(self):
+        return 8
+
+    def decode_step_time(self, batch):
+        return self._decode if batch else 0.0
+
+    def prefill_time(self, req):
+        return self._prefill
+
+
+def _engine(max_batch=8):
+    eng = ServingEngine(
+        EngineConfig(scheduler=SchedulerConfig(max_batch=max_batch),
+                     adapter_budget_bytes=1e9, mode="jd"),
+        TinyJDExecutor())
+    # zero-cost DMA so clock arithmetic is exact
+    eng.cache = AdapterCache(CacheConfig(1e9, DMAModel(bandwidth=1e30,
+                                                       latency=0.0)))
+    return eng
+
+
+def _fleet(n=2, policy="round_robin", cluster_of=None):
+    cfg = FleetConfig(n_replicas=n, policy=policy, spill_requests=1e9)
+    return Fleet(cfg, [_engine() for _ in range(n)], cluster_of)
+
+
+def _lc(fleet, refresh_interval=1.0, step=0.05, **kw):
+    return AdapterLifecycle(
+        fleet, LifecycleConfig(refresh_interval=refresh_interval,
+                               rollout_step_interval=step), **kw)
+
+
+def _reqs(adapters, arrivals=None, new_tokens=2, rid0=0):
+    arrivals = arrivals or [0.0] * len(adapters)
+    return [Request(rid=rid0 + i, adapter_id=a, prompt_len=8,
+                    max_new_tokens=new_tokens, arrival_time=t)
+            for i, (a, t) in enumerate(zip(adapters, arrivals))]
+
+
+# ---------------------------------------------------------------------------
+# L1: hot register -> immediately raw-servable
+# ---------------------------------------------------------------------------
+
+
+def test_register_serves_immediately_raw():  # L1
+    """Invariant L1: a registered adapter is servable before any
+    compression work — raw overlay on every executor, request completes."""
+    f = _fleet(2)
+    lc = _lc(f)
+    st = lc.register(100, now=0.0)
+    assert st.state == RAW_SERVING and st.epoch == 0
+    assert all(100 in eng.executor.raw_ids for eng in f.engines)
+    assert 100 in f.cluster_of                     # cluster assigned at once
+    reqs = _reqs([100])
+    lc.stamp(reqs)
+    f.submit(reqs)
+    f.run()
+    assert reqs[0].done and reqs[0].adapter_epoch == 0
+    assert lc.stats.raw_requests == 1
+
+
+def test_register_ttft_matches_established_adapter():  # L1
+    """Invariant L1: no cold-start TTFT cliff — the hot-registered
+    adapter's first request pays exactly what an established raw adapter
+    pays (same fixed-cost executor; no extra compression stall)."""
+    f1 = _fleet(1)
+    r_est = _reqs([0])
+    f1.submit(r_est)
+    f1.run()
+    f2 = _fleet(1)
+    lc = _lc(f2)
+    lc.register(100)
+    r_hot = _reqs([100])
+    lc.stamp(r_hot)
+    f2.submit(r_hot)
+    f2.run()
+    assert r_hot[0].ttft == r_est[0].ttft
+
+
+def test_weight_key_epoch0_is_bare_adapter_id():
+    r = _reqs([7])[0]
+    assert weight_key(r) == 7                      # legacy cache key
+    r.adapter_epoch = 2
+    assert weight_key(r) == (7, 2)
+
+
+# ---------------------------------------------------------------------------
+# L2: background refresh walks the fleet one replica at a time
+# ---------------------------------------------------------------------------
+
+
+def test_rollout_one_replica_at_a_time():  # L2
+    """Invariant L2: a refresh swaps bases on one replica per pacing
+    interval; at most one rollout is in flight fleet-wide."""
+    f = _fleet(2)
+    lc = _lc(f, refresh_interval=1.0, step=0.05)
+    lc.register(100)
+    lc.tick(1.0)                                   # cadence elapsed
+    assert lc.refresh_active
+    assert [e.cache.n_swaps for e in f.engines] == [1, 0]   # only replica 0
+    lc.tick(1.04)                                  # pacing not yet elapsed
+    assert [e.cache.n_swaps for e in f.engines] == [1, 0]
+    lc.tick(1.05)                                  # replica 1's turn
+    assert [e.cache.n_swaps for e in f.engines] == [1, 1]
+    assert not lc.refresh_active and lc.basis_version == 1
+    assert lc.stats.n_refreshes == 1
+    st = lc.adapters[100]
+    assert st.state == CLUSTER_ASSIGNED
+    assert all(100 not in e.executor.raw_ids for e in f.engines)
+
+
+def test_no_second_rollout_while_one_in_flight():  # L2
+    f = _fleet(2)
+    lc = _lc(f, refresh_interval=0.01, step=1.0)   # pacing >> cadence
+    lc.register(100)
+    lc.tick(0.5)
+    ro = lc.rollout
+    assert ro is not None and ro.next_idx == 1
+    lc.register(101)
+    lc.tick(0.6)                                   # cadence long elapsed
+    assert lc.rollout is ro                        # same rollout, no new one
+
+
+# ---------------------------------------------------------------------------
+# L3: gate failure -> rollback, keep serving raw
+# ---------------------------------------------------------------------------
+
+
+def test_failed_gate_rolls_back_all_swapped_replicas():  # L3
+    """Invariant L3: a gate failure re-pins the prior basis on every
+    replica the rollout touched; the adapter keeps serving raw and a
+    later cadence retries successfully."""
+    f = _fleet(2)
+    calls = []
+
+    def gate(ro, target):
+        calls.append(target)
+        return GateResult(ok=len(calls) != 2)      # fail on the 2nd replica
+
+    lc = _lc(f, refresh_interval=1.0, step=0.05, gate_fn=gate)
+    lc.register(100)
+    lc.tick(1.0)
+    lc.tick(2.0)                                   # 2nd swap -> gate fails
+    assert lc.stats.n_rollbacks == 1
+    assert lc.stats.n_gate_failures == 1
+    assert lc.rollout is None and lc.basis_version == 0
+    # candidate + rollback re-pin on both touched replicas
+    assert [e.cache.n_swaps for e in f.engines] == [2, 2]
+    st = lc.adapters[100]
+    assert st.state == RAW_SERVING                 # still served raw
+    assert all(100 in e.executor.raw_ids for e in f.engines)
+    reqs = _reqs([100])
+    lc.stamp(reqs)
+    f.submit(reqs)
+    f.run()
+    assert reqs[0].done                            # serving uninterrupted
+    lc.tick(3.0)                                   # next cadence retries
+    lc.tick(3.05)
+    assert lc.stats.n_refreshes == 1 and lc.basis_version == 1
+    assert lc.adapters[100].state == CLUSTER_ASSIGNED
+
+
+def test_gate_thresholds_enforced():  # L3
+    """A gate verdict above the configured reconstruction-error bound or
+    below the agreement floor fails even with ok=True."""
+    for bad in (GateResult(ok=True, rel_err=0.9),
+                GateResult(ok=True, agreement=0.5)):
+        f = _fleet(1)
+        lc = _lc(f, gate_fn=lambda ro, t, _g=bad: _g)
+        lc.register(100)
+        lc.tick(1.0)
+        assert lc.stats.n_rollbacks == 1
+        assert lc.adapters[100].state == RAW_SERVING
+
+
+def test_register_during_rollout_waits_for_next_refresh():
+    """An adapter registered while a rollout is mid-flight is NOT
+    absorbed by it (the candidate basis predates it); the next cadence
+    picks it up."""
+    f = _fleet(2)
+    lc = _lc(f, refresh_interval=1.0, step=0.05)
+    lc.register(100)
+    lc.tick(1.0)                                   # rollout for 100 starts
+    assert lc.refresh_active
+    lc.register(101, now=1.01)                     # mid-rollout
+    assert (101, 0) not in lc.rollout.adapters
+    lc.tick(1.05)                                  # rollout completes
+    assert lc.adapters[100].state == CLUSTER_ASSIGNED
+    assert lc.adapters[101].state == RAW_SERVING   # still raw, still served
+    lc.tick(2.1)
+    lc.tick(2.2)
+    assert lc.adapters[101].state == CLUSTER_ASSIGNED
+
+
+# ---------------------------------------------------------------------------
+# L4: epoch pinning across updates
+# ---------------------------------------------------------------------------
+
+
+def test_update_inflight_finishes_on_old_epoch():  # L4
+    """Invariant L4: requests stamped before an update decode against the
+    epoch they started on; the stale epoch's weights release only when
+    its last request drains."""
+    f = _fleet(1)
+    lc = _lc(f)
+    lc.register(7)
+    old = _reqs([7], new_tokens=8)
+    lc.stamp(old)
+    f.submit(old)
+    f.advance_to(1.2)                              # prefilled, mid-decode
+    assert not old[0].done
+    lc.update(7, now=1.2)
+    assert lc.adapters[7].epoch == 1
+    new = _reqs([7], rid0=1)
+    lc.stamp(new)
+    f.submit(new)
+    f.run()
+    assert old[0].adapter_epoch == 0 and new[0].adapter_epoch == 1
+    assert weight_key(old[0]) == 7 and weight_key(new[0]) == (7, 1)
+    # stale epoch-0 weights were discarded when the old request drained
+    assert not f.engines[0].cache.is_resident(7)
+    assert f.engines[0].cache.is_resident((7, 1))
+    assert lc.stats.bytes_released > 0
+    assert lc.stats.n_updated == 1
+
+
+def test_retire_while_inflight_drains_on_old_epoch():  # L4
+    """A retired adapter's in-flight request finishes on the epoch it was
+    stamped with; releases happen only after the drain."""
+    f = _fleet(1)
+    lc = _lc(f)
+    lc.register(9)
+    inflight = _reqs([9], new_tokens=8)
+    lc.stamp(inflight)
+    f.submit(inflight)
+    f.advance_to(1.2)
+    assert not inflight[0].done
+    lc.retire(9, now=1.2)
+    assert lc.adapters[9].state == RETIRED
+    assert 9 in f.cluster_of                       # not released: draining
+    with pytest.raises(ValueError):                # but no longer routable
+        lc.stamp(_reqs([9], rid0=5))
+    f.run()
+    assert inflight[0].done and inflight[0].adapter_epoch == 0
+    assert 9 not in f.cluster_of                   # released after drain
+    assert all(9 not in e.executor.raw_ids for e in f.engines)
+    assert not f.engines[0].cache.is_resident(9)
+
+
+# ---------------------------------------------------------------------------
+# L5: retirement releases affinity, pages, and (lazily) the Sigma row
+# ---------------------------------------------------------------------------
+
+
+def test_retire_releases_affinity_and_bytes():  # L5
+    """Invariant L5: retiring drops the routing home immediately, frees
+    the adapter's cache bytes at drain, and drops the Sigma row at the
+    next refresh (lazy shrink)."""
+    cluster_of = {}
+    f = _fleet(2, policy="cluster_affinity", cluster_of=cluster_of)
+    lc = _lc(f, assign_fn=lambda aid: 900 + aid)   # private cluster each
+    lc.register(100)
+    reqs = _reqs([100])
+    lc.stamp(reqs)
+    f.submit(reqs)
+    f.run()
+    assert 1000 in f._home                         # cluster key homed
+    lc.retire(100, now=5.0)
+    assert 1000 not in f._home                     # affinity gone at once
+    assert lc.stats.bytes_released > 0             # weights freed (drained)
+    assert 100 in lc._shrink_pending
+    lc.tick(10.0)
+    lc.tick(10.05)
+    assert lc.stats.n_shrunk == 1 and not lc._shrink_pending
+
+
+def test_retire_keeps_shared_cluster_home():  # L5
+    """The cluster affinity key survives a retire while another live
+    adapter still maps to that cluster."""
+    cluster_of = {}
+    f = _fleet(2, policy="cluster_affinity", cluster_of=cluster_of)
+    lc = _lc(f, assign_fn=lambda aid: 500)         # both share one cluster
+    lc.register(100)
+    lc.register(101)
+    reqs = _reqs([100, 101])
+    lc.stamp(reqs)
+    f.submit(reqs)
+    f.run()
+    assert 500 in f._home
+    lc.retire(100, now=5.0)
+    assert 500 in f._home                          # 101 still lives there
+    lc.retire(101, now=6.0)
+    assert 500 not in f._home
+
+
+# ---------------------------------------------------------------------------
+# scoped rehome (membership-change regression)
+# ---------------------------------------------------------------------------
+
+
+class TestScopedRehome:
+    def _homed_fleet(self):
+        f = _fleet(2, policy="adapter_affinity")
+        f.submit(_reqs([0, 1]))
+        h0, h1 = f._home[0], f._home[1]
+        assert h0 != h1                            # least-loaded spread
+        return f, h0, h1
+
+    def test_add_replica_keeps_existing_homes(self):
+        """Regression: growing the fleet used to clear ALL affinity homes
+        (a full re-home), churning every adapter's pinned-base locality;
+        existing homes stay valid — only new load lands on the new
+        replica."""
+        f, h0, h1 = self._homed_fleet()
+        f.add_replica(_engine())
+        assert f._home[0] == h0 and f._home[1] == h1
+
+    def test_retire_replica_drops_only_its_homes(self):
+        f, h0, h1 = self._homed_fleet()
+        f.retire_replica(h1)
+        assert f._home[0] == h0                    # survivor untouched
+        assert 1 not in f._home                    # retired replica's key
+
+    def test_unscoped_rehome_clears_everything(self):
+        f, _, _ = self._homed_fleet()
+        f.rehome()
+        assert f._home == {}
+
+
+# ---------------------------------------------------------------------------
+# grounded: incremental assignment / lazy shrink / refresh gate
+# ---------------------------------------------------------------------------
+
+
+def _two_family_bank(key, per=5, r_l=2, d=24, noise=0.02):
+    k1, k2, k3, k4, kn = jax.random.split(key, 5)
+    A1, B1 = (jax.random.normal(k1, (1, r_l, d)),
+              jax.random.normal(k2, (1, d, r_l)))
+    A2, B2 = (jax.random.normal(k3, (1, r_l, d)),
+              jax.random.normal(k4, (1, d, r_l)))
+    A = jnp.concatenate([jnp.tile(A1, (per, 1, 1)),
+                         jnp.tile(A2, (per, 1, 1))])
+    B = jnp.concatenate([jnp.tile(B1, (per, 1, 1)),
+                         jnp.tile(B2, (per, 1, 1))])
+    return A + noise * jax.random.normal(kn, A.shape), B
+
+
+def test_assign_adapter_matches_full_assignment_scores():
+    """The singleton fast path places a new adapter exactly where the
+    full (n, k) assignment scan would."""
+    A, B = _two_family_bank(jax.random.PRNGKey(0))
+    c = cluster_jd(A, B, rank=4, n_clusters=2, jd_iters=20, outer_iters=5)
+    for i in (0, 7):                               # one from each family
+        j, sigma, rel = assign_adapter(A[i], B[i], c)
+        full = _assignment_scores(A[i:i + 1], B[i:i + 1], c.U, c.V)[0]
+        assert j == int(jnp.argmax(full))
+        assert sigma.shape == (c.rank, c.rank)
+        assert rel < 0.2                           # in-family: good fit
+
+
+def test_add_and_drop_adapter_shapes_and_lazy_shrink():
+    A, B = _two_family_bank(jax.random.PRNGKey(1))
+    c = cluster_jd(A, B, rank=4, n_clusters=2, jd_iters=20)
+    n = c.sigma.shape[0]
+    c2, j, rel = add_adapter(c, A[0], B[0])        # re-add a family member
+    assert c2.sigma.shape[0] == n + 1 and int(c2.assign[-1]) == j
+    assert float(jnp.linalg.norm(c2.U - c.U)) == 0.0   # bases untouched
+    c3 = drop_adapter(c2, n)                       # lazy shrink: row only
+    assert c3.sigma.shape[0] == n
+    assert bool(jnp.all(c3.sigma == c.sigma))
+
+
+def test_refresh_gate_passes_in_family_and_rejects_regression():
+    A, B = _two_family_bank(jax.random.PRNGKey(2))
+    serving = cluster_jd(A, B, rank=4, n_clusters=2, jd_iters=20)
+    # candidate absorbs one more in-family adapter, re-solved over n+1
+    A1, B1 = (jnp.concatenate([A, A[:1]]), jnp.concatenate([B, B[:1]]))
+    cand = cluster_jd(A1, B1, rank=4, n_clusters=2, jd_iters=20)
+    g = refresh_gate(A1, B1, serving, cand, max_regression=0.05,
+                     abs_slack=1e-3, max_new_rel_err=0.3)
+    assert g["ok"] and g["new_worst_rel_err"] < 0.3
+    # a garbage candidate (random bases) must be rejected
+    kq = jax.random.PRNGKey(3)
+    qU, _ = jnp.linalg.qr(jax.random.normal(kq, cand.U.shape))
+    bad = cluster_jd(A1, B1, rank=4, n_clusters=2, jd_iters=0,
+                     outer_iters=1, kmeans_iters=1)
+    bad = type(bad)(U=qU, V=bad.V, sigma=bad.sigma * 0.0,
+                    assign=bad.assign, diag=bad.diag)
+    g_bad = refresh_gate(A1, B1, serving, bad, max_regression=0.05,
+                         max_new_rel_err=0.3)
+    assert not g_bad["ok"]
+
+
+# ---------------------------------------------------------------------------
+# churn workload + study driver + autoscaler signal
+# ---------------------------------------------------------------------------
+
+
+def test_churn_workload_respects_lifetimes():
+    spec = ChurnSpec(base=WorkloadSpec(n_requests=200, n_adapters=16,
+                                       arrival="poisson", arrival_rate=80.0,
+                                       seed=0),
+                     churn_rate=3.0, lifetime=0.8, request_rate=25.0, seed=1)
+    reqs, events = make_churn_workload(spec)
+    assert events == sorted(events, key=lambda e: e.t)
+    windows = {}
+    for e in events:
+        if e.action == "register":
+            windows[e.adapter_id] = [e.t, None]
+        elif e.action == "retire":
+            windows[e.adapter_id][1] = e.t
+    for r in reqs:
+        if r.adapter_id >= 16:                     # churn adapter
+            lo, hi = windows[r.adapter_id]
+            assert lo <= r.arrival_time < hi
+    reqs2, events2 = make_churn_workload(spec)     # deterministic
+    assert [r.arrival_time for r in reqs2] == [r.arrival_time for r in reqs]
+    assert [(e.t, e.action, e.adapter_id) for e in events2] \
+        == [(e.t, e.action, e.adapter_id) for e in events]
+
+
+def test_churn_study_end_to_end_cost_model():
+    """Full cost-model fleet under churn: every request (base + churn)
+    completes, lifecycle counters line up with the event stream, and no
+    rollout ever fails into production (default gate)."""
+    cfg = get_config("mistral-7b")
+    n = 16
+    setting, cluster_of, budget = memory_matched_setup(cfg, n)
+    # memory matching covers bases + sigmas only; hot-registered adapters
+    # serve RAW until a refresh lands, so the cell needs LoRA headroom
+    fp_lora = serving_footprint(cfg, "lora", n, setting)
+    budget += 4 * fp_lora.lora_bytes_per_adapter
+    fleet = build_fleet(cfg, "jd", n, budget,
+                        FleetConfig(n_replicas=2, policy="cluster_affinity",
+                                    spill_requests=1e9),
+                        ServingHardware(), cluster_of, setting)
+    lc = AdapterLifecycle(fleet, LifecycleConfig(refresh_interval=0.5),
+                          assign_fn=lambda aid: aid % setting["clusters"])
+    spec = ChurnSpec(base=WorkloadSpec(n_requests=150, n_adapters=n,
+                                       arrival="poisson", arrival_rate=100.0,
+                                       popularity="zipf", seed=2),
+                     churn_rate=2.0, lifetime=0.8, request_rate=20.0, seed=3)
+    reqs, events = make_churn_workload(spec)
+    stats = run_churn_study(fleet, lc, reqs, events, window=0.25)
+    assert stats.total.n_requests == len(reqs)
+    assert all(r.done for r in reqs)
+    d = stats.lifecycle
+    n_reg = sum(1 for e in events if e.action == "register")
+    n_ret = sum(1 for e in events if e.action == "retire")
+    assert d["n_registered"] == n_reg and d["n_retired"] == n_ret
+    assert d["n_rollbacks"] == 0 and d["n_gate_failures"] == 0
+    assert d["raw_requests"] + d["assigned_requests"] \
+        == sum(1 for r in reqs if r.adapter_id >= n)
+    assert "lifecycle" in stats.to_dict()
+
+
+def test_autoscaler_refresh_veto_blocks_scale_down():
+    """A comfortable window normally classifies decode cold (-1 replica);
+    with a basis rollout in flight the lifecycle signal vetoes the
+    shrink — replicas take turns stalled on base swaps."""
+    scaler = JointAutoscaler(
+        JointAutoscalerConfig(cooldown_intervals=0),
+        SLOConfig(ttft_p95=0.5),
+        HardwareBudget(BudgetConfig(total_accelerators=8)))
+    comfortable = dict(ttfts=[0.01] * 8, tpots=[0.001] * 8,
+                       decode_waits=[0.01] * 8, prefill_lags=[0.01] * 8,
+                       prefill_backlog=0, decode_backlog=0)
+    assert scaler.decide(1.0, n_prefill=1, n_decode=2,
+                         refresh_active=True, **comfortable) == (0, 0)
+    assert scaler.history[-1].refresh_active
+    assert scaler.decide(2.0, n_prefill=1, n_decode=2,
+                         refresh_active=False, **comfortable) == (0, -1)
