@@ -21,9 +21,10 @@ import argparse
 import json
 import sys
 
-# metrics where larger is better (throughputs); a latency metric would be
-# gated in the opposite direction if one is ever added here
-HIGHER_IS_BETTER = ("rps",)
+# metrics where larger is better (throughputs, fused-vs-unfused speedups,
+# residency compression ratios); a latency metric would be gated in the
+# opposite direction if one is ever added here
+HIGHER_IS_BETTER = ("rps", "speedup", "ratio")
 
 
 def compare(current: dict, baseline: dict, tolerance: float):

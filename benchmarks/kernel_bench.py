@@ -1,6 +1,13 @@
 """Kernel-level microbench: SGMV / JD-apply arithmetic-intensity model +
 interpret-mode sanity timing (CPU has no MXU; see EXPERIMENTS.md §Perf for
-the dry-run-derived roofline placement of these ops)."""
+the dry-run-derived roofline placement of these ops).
+
+PR 8 adds the fused decode rows: attention + adapter delta as one pass
+(`kernels/fused_decode.py`) vs the composed unfused pipeline
+(`flash_decode` then the adapter delta as a second pass over the same
+activations), emitted as a fused-vs-unfused speedup table so a regression
+in EITHER path is visible — the unfused path stays the bit-exactness
+anchor, so it getting slower must not hide behind the fused win."""
 from __future__ import annotations
 
 import jax
@@ -34,6 +41,55 @@ def main(quick: bool = True):
     bytes_jd = 2 * d * r * 2 + T * r * r * 2
     rows.append(csv_row("jd_apply", t * 1e6,
                         f"flops={flops:.2e};ai={flops/bytes_jd:.2f}"))
+    rows.extend(fused_rows(quick))
+    return rows
+
+
+def fused_rows(quick: bool = True):
+    """Fused decode (one pass) vs composed flash_decode + delta (two
+    passes), ref impls on identical inputs — the speedup table."""
+    rows = []
+    B, H, Kv, hd, S, n, r, d_out = 8, 8, 4, 64, 512, 16, 16, 512
+    ks = jax.random.split(jax.random.PRNGKey(1), 7)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Kv, hd), jnp.float32)
+    kv_len = jnp.full((B,), S, jnp.int32)
+    ids = jax.random.randint(ks[3], (B,), 0, n)
+    A = jax.random.normal(ks[4], (n, r, H * hd), jnp.float32) / 8
+    Bm = jax.random.normal(ks[5], (n, d_out, r), jnp.float32) / 4
+
+    def unfused(q, k, v, kv_len, ids, A, Bm):
+        of = R.flash_decode_ref(q, k, v, kv_len)
+        of2 = of.reshape(B, -1)                 # second pass re-reads attn out
+        t = jnp.einsum("bd,brd->br", of2, A[ids])
+        return of, jnp.einsum("br,bor->bo", t, Bm[ids])
+
+    _, t_un = timed(jax.jit(unfused), q, k, v, kv_len, ids, A, Bm, reps=5)
+    _, t_fu = timed(jax.jit(R.fused_decode_lora_ref),
+                    q, k, v, kv_len, ids, A, Bm, reps=5)
+    rows.append(csv_row("fused_decode_lora", t_fu * 1e6,
+                        f"unfused_us={t_un * 1e6:.1f};"
+                        f"speedup={t_un / t_fu:.2f}"))
+    U = jax.random.normal(ks[4], (4, d_out, r), jnp.float32) / 4
+    V = jax.random.normal(ks[5], (4, H * hd, r), jnp.float32) / 8
+    sig = jax.random.normal(ks[6], (n, r, r), jnp.float32) / 4
+    cl = (jnp.arange(n, dtype=jnp.int32) % 4)
+
+    def unfused_jd(q, k, v, kv_len, ids, U, V, sig, cl):
+        of = R.flash_decode_ref(q, k, v, kv_len)
+        of2 = of.reshape(B, -1)
+        t = jnp.einsum("bd,bdr->br", of2, V[cl[ids]])
+        t = jnp.einsum("br,brq->bq", t, sig[ids])
+        return of, jnp.einsum("br,bor->bo", t, U[cl[ids]])
+
+    _, t_un = timed(jax.jit(unfused_jd), q, k, v, kv_len, ids, U, V, sig,
+                    cl, reps=5)
+    _, t_fu = timed(jax.jit(R.fused_decode_jd_ref), q, k, v, kv_len, ids,
+                    U, V, sig, cl, reps=5)
+    rows.append(csv_row("fused_decode_jd", t_fu * 1e6,
+                        f"unfused_us={t_un * 1e6:.1f};"
+                        f"speedup={t_un / t_fu:.2f}"))
     return rows
 
 

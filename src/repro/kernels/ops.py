@@ -11,6 +11,8 @@ import jax.numpy as jnp
 
 from . import ref as ref_mod
 from .flash_decode import flash_decode as _flash_decode_pallas
+from .fused_decode import fused_decode_jd as _fused_jd_pallas
+from .fused_decode import fused_decode_lora as _fused_lora_pallas
 from .jd_apply import jd_apply as _jd_apply_pallas
 from .sgmv import sgmv_expand, sgmv_shrink
 
@@ -77,3 +79,33 @@ def decode_attention(q: Array, k: Array, v: Array, kv_len: Array, *,
     out, _, _ = _flash_decode_pallas(q, k, v, kv_len,
                                      interpret=(impl == "interpret"))
     return out
+
+
+def fused_lora_decode(q: Array, k: Array, v: Array, kv_len: Array,
+                      ids: Array, A: Array, B: Array,
+                      a_scale=None, b_scale=None, *, use_pallas="auto"):
+    """Fused decode attention + per-slot raw-LoRA output delta
+    (`fused_decode.fused_decode_lora`): attention and the adapter shrink/
+    expand in ONE kernel pass.  Optional per-channel scales serve int8
+    banks from `adapter_quant.py`.  Returns (out (B,H,hd), delta (B,d_out))."""
+    impl = resolve_impl(use_pallas)
+    if impl == "ref":
+        return ref_mod.fused_decode_lora_ref(q, k, v, kv_len, ids, A, B,
+                                             a_scale, b_scale)
+    return _fused_lora_pallas(q, k, v, kv_len, ids, A, B, a_scale, b_scale,
+                              interpret=(impl == "interpret"))
+
+
+def fused_jd_decode(q: Array, k: Array, v: Array, kv_len: Array, ids: Array,
+                    U: Array, V: Array, sigma: Array, cluster_of: Array,
+                    u_scale=None, v_scale=None, *, use_pallas="auto"):
+    """Fused decode attention + compressed shared-basis output delta
+    (`fused_decode.fused_decode_jd`)."""
+    impl = resolve_impl(use_pallas)
+    if impl == "ref":
+        return ref_mod.fused_decode_jd_ref(q, k, v, kv_len, ids, U, V,
+                                           sigma, cluster_of, u_scale,
+                                           v_scale)
+    return _fused_jd_pallas(q, k, v, kv_len, ids, U, V, sigma, cluster_of,
+                            u_scale, v_scale,
+                            interpret=(impl == "interpret"))

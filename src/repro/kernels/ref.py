@@ -144,3 +144,77 @@ def group_tokens_by_adapter(ids: Array, n_adapters: int, tile: int
         tile_ids.extend([a] * ((sel.size + pad) // tile))
     return (jnp.asarray(perm, jnp.int32), jnp.asarray(tile_ids, jnp.int32),
             jnp.asarray(valid, jnp.int32))
+
+
+def adapter_quant_ref(w: Array, axis: int = -1) -> Tuple[Array, Array]:
+    """Per-output-channel symmetric int8 oracle for adapter/basis banks
+    (`adapter_quant.py`): one f32 scale per channel, reduced over the
+    matrix's input `axis` (keepdims)."""
+    xf = w.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=axis, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def adapter_dequant_ref(q: Array, scale: Array,
+                        out_dtype=jnp.float32) -> Array:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(
+        out_dtype)
+
+
+def _deq(w: Array, scale: Optional[Array]) -> Array:
+    wf = w.astype(jnp.float32)
+    return wf if scale is None else wf * scale.astype(jnp.float32)
+
+
+def fused_decode_lora_ref(q: Array, k: Array, v: Array, kv_len, ids: Array,
+                          A: Array, B: Array, a_scale=None, b_scale=None
+                          ) -> Tuple[Array, Array]:
+    """Composed oracle for `fused_decode.fused_decode_lora`: decode
+    attention, then the per-slot LoRA delta on the flattened (H*hd)
+    attention output.  Optional per-channel scales dequantize int8 banks
+    (`adapter_quant_ref`); returns (out (B,H,hd), delta (B,d_out) f32)."""
+    out = flash_decode_ref(q, k, v, kv_len)
+    of = out.reshape(out.shape[0], -1).astype(jnp.float32)
+    t = jnp.einsum("bd,brd->br", of, _deq(A, a_scale)[ids])
+    delta = jnp.einsum("br,bor->bo", t, _deq(B, b_scale)[ids])
+    return out, delta
+
+
+def fused_decode_jd_ref(q: Array, k: Array, v: Array, kv_len, ids: Array,
+                        U: Array, V: Array, sigma: Array, cluster_of: Array,
+                        u_scale=None, v_scale=None) -> Tuple[Array, Array]:
+    """Composed oracle for `fused_decode.fused_decode_jd`: attention, then
+    the compressed shared-basis delta (V^T -> Sigma -> U) with per-slot
+    sigma and per-cluster bases."""
+    out = flash_decode_ref(q, k, v, kv_len)
+    of = out.reshape(out.shape[0], -1).astype(jnp.float32)
+    cid = cluster_of[ids]
+    t = jnp.einsum("bd,bdr->br", of, _deq(V, v_scale)[cid])
+    sig = sigma[ids].astype(jnp.float32)
+    if sig.ndim == 2:                        # JD-Diag: (B, r)
+        t = t * sig
+    else:                                    # JD-Full: (B, r, r)
+        t = jnp.einsum("br,brq->bq", t, sig)
+    delta = jnp.einsum("br,bor->bo", t, _deq(U, u_scale)[cid])
+    return out, delta
+
+
+def fused_decode_lora_paged_ref(q, k_pages, v_pages, page_table, kv_len,
+                                ids, A, B, a_scale=None, b_scale=None):
+    """Paged fused oracle: gather pages to contiguous, then the contiguous
+    fused oracle (same contract as `flash_decode_paged_ref`)."""
+    return fused_decode_lora_ref(
+        q, gather_pages_ref(k_pages, page_table),
+        gather_pages_ref(v_pages, page_table), kv_len, ids, A, B,
+        a_scale, b_scale)
+
+
+def fused_decode_jd_paged_ref(q, k_pages, v_pages, page_table, kv_len, ids,
+                              U, V, sigma, cluster_of,
+                              u_scale=None, v_scale=None):
+    return fused_decode_jd_ref(
+        q, gather_pages_ref(k_pages, page_table),
+        gather_pages_ref(v_pages, page_table), kv_len, ids, U, V, sigma,
+        cluster_of, u_scale, v_scale)

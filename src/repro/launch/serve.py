@@ -25,9 +25,14 @@ from repro.serving.simulator import WorkloadConfig, make_workload, \
 
 
 def run_real(cfg, n_adapters: int, n_requests: int, mode: str = "jd",
-             max_batch: int = 8, seed: int = 0) -> dict:
+             max_batch: int = 8, seed: int = 0,
+             decode_path: str = "unfused") -> dict:
     """Real execution path: random adapters (paper §6.4 simulates random
-    LoRAs for throughput), real prefill/decode with batched adapter math."""
+    LoRAs for throughput), real prefill/decode with batched adapter math.
+    ``decode_path`` selects the executor's decode step ("unfused" keeps the
+    baseline-bit-exact generic path; "fused"/"fused_q8" run the one-pass
+    kernel of `kernels/fused_decode.py`); the fused paths add an "o" target
+    so the fused epilogue has an output delta to apply."""
     from repro.models import transformer as tf
     from repro.models.param import init_params
     from repro.serving.real_executor import RealModelExecutor
@@ -43,6 +48,8 @@ def run_real(cfg, n_adapters: int, n_requests: int, mode: str = "jd",
     bundles = {"layers": {}}
     dims = {"q": (d, cfg.num_heads * hd), "k": (d, cfg.num_kv_heads * hd),
             "v": (d, cfg.num_kv_heads * hd)}
+    if decode_path != "unfused":
+        dims["o"] = (cfg.num_heads * hd, d)
     for tname, (di, do) in dims.items():
         ka, kb = jax.random.split(jax.random.fold_in(key, hash(tname) % 97))
         if mode == "lora":
@@ -61,10 +68,12 @@ def run_real(cfg, n_adapters: int, n_requests: int, mode: str = "jd",
                 "cluster_of": jnp.zeros((L, n_adapters), jnp.int32)}
 
     s_max = 160
-    ex = RealModelExecutor(cfg, params, bundles, mode, max_batch, s_max)
+    ex = RealModelExecutor(cfg, params, bundles, mode, max_batch, s_max,
+                           decode_path=decode_path)
     eng = ServingEngine(EngineConfig(
         scheduler=SchedulerConfig(max_batch=max_batch),
-        adapter_budget_bytes=1e12, mode="lora"), ex)
+        adapter_budget_bytes=1e12, mode="lora",
+        decode_path=decode_path), ex)
     wl = WorkloadConfig(n_requests=n_requests, n_adapters=n_adapters,
                         prompt_len_mean=24, prompt_len_std=4, new_tokens=8)
     def _release(req):
@@ -86,6 +95,8 @@ def main():
     ap.add_argument("--real", action="store_true")
     ap.add_argument("--adapters", type=int, default=8)
     ap.add_argument("--mode", default="jd", choices=["jd", "lora"])
+    ap.add_argument("--decode-path", default="unfused",
+                    choices=["unfused", "fused", "fused_q8"])
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -96,7 +107,8 @@ def main():
         for r in rows:
             print(json.dumps(r, indent=None, default=str))
     elif args.real:
-        out = run_real(cfg, args.adapters, args.requests, args.mode)
+        out = run_real(cfg, args.adapters, args.requests, args.mode,
+                       decode_path=args.decode_path)
         print(json.dumps(out, indent=2))
 
 

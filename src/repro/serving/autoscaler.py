@@ -243,6 +243,9 @@ class JointAutoscaler:
             self.bind_compression(comp_policy)
         self.history: List[JointScaleDecision] = []
         self._cooldown = 0
+        # previous window's decompress_util: "sustained" decode-side
+        # dequant pressure = above the cold threshold two windows running
+        self._prev_decompress_util = 0.0
 
     def bind_compression(self, policy: AdaptiveCompressionPolicy) -> None:
         """Attach the fabric's adaptive policy as the compression axis.
@@ -376,6 +379,19 @@ class JointAutoscaler:
             elif (pre_cold and n_prefill > cfg.min_prefill
                   and self._trade_frees_enough("prefill", "decode")):
                 d_pre, d_dec = -1, 1             # trade: prefill funds decode
+        elif (decompress_util >= cfg.decompress_cold_util
+              and self._prev_decompress_util >= cfg.decompress_cold_util
+              and self.comp_policy is not None
+              and self.comp_policy.ceiling > self._comp_floor
+              and self.comp_policy.lower_ceiling()):
+            # sustained decode-side dequant pressure (a full window above
+            # the cold threshold on both sides of this decision): the
+            # compression that saved wire bytes is now taxing decode
+            # compute every window — relax the ceiling one level even
+            # though the wire isn't quiet.  Without this branch the high
+            # decompress_util itself vetoes dec_cold, so nothing on the
+            # decode axis ever moved and the tax was permanent.
+            d_comp = -1
         elif pre_cold and n_prefill > cfg.min_prefill:
             d_pre = -1                           # release to the pool
         elif dec_cold and n_decode > cfg.min_decode:
@@ -387,6 +403,7 @@ class JointAutoscaler:
             d_comp = -1                          # quiet window: ship raw again
         if d_pre or d_dec or d_comp:
             self._cooldown = cfg.cooldown_intervals
+        self._prev_decompress_util = decompress_util
         self.history.append(JointScaleDecision(
             t=now, n_prefill=n_prefill, n_decode=n_decode,
             free_accels=self.budget.available, ttft_p95=ttft_p95,

@@ -55,20 +55,45 @@ class ModelFootprint:
 
     @staticmethod
     def from_config(cfg, rank: int = 16, jd_rank: int = 16,
-                    n_clusters: int = 1, diag: bool = False) -> "ModelFootprint":
+                    n_clusters: int = 1, diag: bool = False,
+                    adapter_bits: int = 16) -> "ModelFootprint":
+        """``adapter_bits=16`` prices bf16 resident adapters (the default,
+        bit-exact with every committed baseline); ``adapter_bits=8`` prices
+        the int8 per-output-channel packing of `kernels/adapter_quant.py`
+        (1 byte per value + one f32 scale per output channel), the
+        residency the ``fused_q8`` decode path actually keeps in the
+        `PagedPool` — roughly a 2x page cut vs bf16 and ~4x vs the float32
+        training-output banks `RealModelExecutor` holds."""
         d = cfg.d_model
         hd = cfg.resolved_head_dim
         dims = {"q": (d, cfg.num_heads * hd), "k": (d, cfg.num_kv_heads * hd),
                 "v": (d, cfg.num_kv_heads * hd)}
-        per_module_lora = sum(rank * (di + do) for di, do in dims.values())
-        per_module_shared = sum(jd_rank * (di + do) for di, do in dims.values())
-        sig = (jd_rank if diag else jd_rank * jd_rank) * len(dims)
+        if adapter_bits == 16:
+            lora_b = sum(2 * rank * (di + do) for di, do in dims.values())
+            shared_b = sum(2 * jd_rank * (di + do)
+                           for di, do in dims.values())
+            sig_b = 2 * (jd_rank if diag else jd_rank * jd_rank) * len(dims)
+        elif adapter_bits == 8:
+            # int8 values + one f32 scale per output channel:
+            # A (r, di): r scales; B (do, r): do scales — per module.
+            lora_b = sum(rank * (di + do) + 4 * (rank + do)
+                         for di, do in dims.values())
+            # shared basis: U (do, jd_rank) do scales; V (di, jd_rank)
+            # jd_rank scales (per-column, the rank axis is the output)
+            shared_b = sum(jd_rank * (di + do) + 4 * (do + jd_rank)
+                           for di, do in dims.values())
+            # diag Sigma stays fp (tiny); full Sigma packs per row
+            sig_b = ((2 * jd_rank if diag
+                      else jd_rank * jd_rank + 4 * jd_rank) * len(dims))
+        else:
+            raise ValueError(f"adapter_bits must be 16 or 8, got "
+                             f"{adapter_bits}")
         return ModelFootprint(
             n_active_params=cfg.active_param_count(),
             weight_bytes=2 * cfg.param_count(),
-            lora_bytes_per_adapter=2 * per_module_lora * cfg.num_layers,
-            jd_shared_bytes_per_cluster=2 * per_module_shared * cfg.num_layers,
-            jd_sigma_bytes_per_adapter=2 * sig * cfg.num_layers,
+            lora_bytes_per_adapter=lora_b * cfg.num_layers,
+            jd_shared_bytes_per_cluster=shared_b * cfg.num_layers,
+            jd_sigma_bytes_per_adapter=sig_b * cfg.num_layers,
             n_clusters=n_clusters,
             kv_bytes_per_token=2 * 2 * cfg.num_layers * cfg.num_kv_heads * hd)
 
@@ -176,6 +201,14 @@ class EngineConfig:
     # ``adapter_budget_bytes`` is ignored.  None = legacy static split,
     # bit-exact with the pre-paging engine.
     pool: Optional[PagedPoolConfig] = None
+    # real-executor decode path (PR 8): "unfused" keeps the generic
+    # transformer decode step (bit-exact with every committed baseline);
+    # "fused" runs the one-pass flash-decode + adapter-delta kernel
+    # (kernels/fused_decode.py) with a donated in-place KV cache;
+    # "fused_q8" additionally serves adapters from int8 per-channel banks
+    # (kernels/adapter_quant.py).  Ignored by CostModelExecutor; a
+    # RealModelExecutor must be constructed with the matching path.
+    decode_path: str = "unfused"
 
 
 class ServingEngine:
@@ -185,6 +218,10 @@ class ServingEngine:
                  cluster_of: Optional[Dict[int, int]] = None):
         self.cfg = cfg
         self.executor = executor
+        ex_path = getattr(executor, "decode_path", None)
+        if ex_path is not None and ex_path != cfg.decode_path:
+            raise ValueError(f"engine decode_path={cfg.decode_path!r} but "
+                             f"the executor was built with {ex_path!r}")
         self.scheduler = Scheduler(cfg.scheduler, cluster_of)
         self.pool: Optional[PagedPool] = None
         if cfg.pool is not None:

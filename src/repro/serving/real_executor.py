@@ -5,7 +5,27 @@ Slot model: a fixed decode batch of ``max_batch`` KV-cache slots; admitted
 requests prefill into a free slot (batch-1 prefill, cache splice); each
 engine decode step advances every occupied slot by one token with per-slot
 adapter ids (mode "lora": stacked A/B banks; mode "jd": U/V/Sigma bundles).
-"""
+
+Decode paths (``decode_path``, surfaced as `EngineConfig.decode_path`):
+
+* ``"unfused"`` (default) — the generic `transformer.decode_step`
+  (functional cache, separate attention + adapter passes).  Bit-exact
+  with every committed baseline.
+* ``"fused"`` — a purpose-built decode step: the per-layer loop is
+  unrolled, rope tables are built once, the KV cache is DONATED to the
+  jit so the single-token write is in-place instead of a full functional
+  cache copy per layer, and attention + the o-projection adapter delta
+  run as ONE fused pass (`kernels/fused_decode.py` via
+  `kernels/ops.py::fused_lora_decode` / `fused_jd_decode`).
+* ``"fused_q8"`` — ``"fused"`` plus int8 per-output-channel adapter
+  residency (`kernels/adapter_quant.py`): banks are packed at
+  construction, `adapter_bytes` shrinks ~4x (threading straight through
+  `PagedPool` page accounting), and the o-target bank is dequantized
+  inside the fused kernel epilogue; q/k/v banks are dequantized in-jit.
+
+`benchmarks/real_decode.py` measures all three and re-derives the
+simulator's cost-model constants from the fused measurements
+(:func:`derive_cost_constants`)."""
 from __future__ import annotations
 
 import time
@@ -16,24 +36,34 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.adapter_quant import adapter_quantize
+from repro.models import layers
 from repro.models import transformer as tf
 from repro.models.lora import LoRAContext
 from repro.serving.request import Request
 
 Array = jax.Array
 
+DECODE_PATHS = ("unfused", "fused", "fused_q8")
+
 
 class RealModelExecutor:
     def __init__(self, cfg: ModelConfig, params, bundles: Dict[str, Dict],
                  mode: str, max_batch: int, s_max: int,
                  cluster_of: Optional[np.ndarray] = None,
-                 adapter_bytes_override: Optional[int] = None):
+                 adapter_bytes_override: Optional[int] = None,
+                 decode_path: str = "unfused"):
         """bundles: layer-structured arrays for the adapters:
         mode 'lora': {"layers": {target: {"A": (L,n,r,d), "B": (L,n,d,r)}}}
         mode 'jd':   {"layers": {target: {"U","V","sigma","cluster_of"}}}"""
+        if decode_path not in DECODE_PATHS:
+            raise ValueError(f"decode_path must be one of {DECODE_PATHS}, "
+                             f"got {decode_path!r}")
         self.cfg, self.mode = cfg, mode
+        self.decode_path = decode_path
         self.params = params
-        self.bundles = bundles
         self.max_batch = max_batch
         self.s_max = s_max
         self.cluster_of = cluster_of
@@ -42,13 +72,37 @@ class RealModelExecutor:
         self.slot_adapter = np.zeros(max_batch, np.int32)
         self.slot_tokens = np.zeros(max_batch, np.int32)
         self.slot_len = np.zeros(max_batch, np.int32)
-        self._decode = jax.jit(self._decode_fn)
+        # host mirror of the cache's scalar index: lets the fused paths pick
+        # a static KV bucket without a device sync
+        self._host_len = 0
+        if decode_path == "unfused":
+            self.bundles = bundles
+            self._decode = jax.jit(self._decode_fn)
+        else:
+            self._check_fusable()
+            if decode_path == "fused_q8":
+                bundles = _quantize_bundles(bundles, mode)
+            self.bundles = bundles
+            # donate the cache: the per-step single-token KV write happens
+            # in place instead of copying every layer's full cache slice
+            self._decode = jax.jit(self._fused_decode_fn, donate_argnums=(3,),
+                                   static_argnames=("bucket",))
         self._prefill = jax.jit(self._prefill_fn)
         nbytes = sum(x.size * x.dtype.itemsize
-                     for x in jax.tree.leaves(bundles)) or 1
+                     for x in jax.tree.leaves(self.bundles)) or 1
         n_adapters = self._n_adapters()
         self._adapter_bytes = adapter_bytes_override or max(
             nbytes // max(n_adapters, 1), 1)
+
+    def _check_fusable(self) -> None:
+        if self.cfg.family not in ("dense", "vlm"):
+            raise ValueError("fused decode paths support dense-attention "
+                             f"families only, not {self.cfg.family!r}")
+        if self.cfg.sliding_window:
+            raise ValueError("fused decode paths assume full attention "
+                             "(sliding_window=0)")
+        if self.mode not in ("lora", "jd"):
+            raise ValueError(f"unknown adapter mode {self.mode!r}")
 
     def _n_adapters(self) -> int:
         for leaf in jax.tree.leaves(self.bundles):
@@ -65,9 +119,105 @@ class RealModelExecutor:
                               lora_params=bundles, lora_ctx_proto=proto)
 
     def _prefill_fn(self, params, bundles, tokens, cache, ids):
+        if self.decode_path == "fused_q8":
+            bundles = _dequantize_bundles(bundles)
         proto = self._ctx(ids)
         return tf.prefill(params, {"tokens": tokens}, self.cfg, cache,
                           lora_params=bundles, lora_ctx_proto=proto)
+
+    # -- fused decode step --------------------------------------------------
+    def _bucket(self) -> int:
+        """Static KV window for the fused step: the occupied prefix of the
+        cache rounded up to 128 tokens (the page/quant-block granule).
+
+        The generic unfused step attends over all ``s_max`` slots every
+        step (masked, but computed); the executor knows the occupied
+        length on the host, so the fused step only ever touches
+        ``ceil(len/128)`` blocks — one retrace per 128 tokens of growth,
+        O(active) attention instead of O(s_max)."""
+        need = self._host_len + 1
+        return min(self.s_max, 128 * -(-need // 128))
+
+    def _fused_decode_fn(self, params, bundles, tokens, cache, ids, *,
+                         bucket):
+        """Unrolled single-token decode with the o-projection adapter delta
+        fused into the attention kernel.  Matches `transformer.decode_step`
+        semantics (scalar cache index, decode at max occupied length);
+        ``bucket`` (static) truncates attention to the occupied KV prefix
+        — masked tail blocks contribute exactly zero, so logits are
+        unchanged."""
+        cfg = self.cfg
+        quant = self.decode_path == "fused_q8"
+        banks = bundles["layers"]
+        if quant:
+            qkv_banks = {t: _dequantize_target(tp)
+                         for t, tp in banks.items() if t != "o"}
+        else:
+            qkv_banks = {t: tp for t, tp in banks.items() if t != "o"}
+        o_bank = banks.get("o")
+        proto = self._ctx(ids)
+
+        x = layers.embed_tokens(params["embed"], tokens)
+        Bt, S, _ = x.shape                       # S == 1
+        idx = cache["index"]
+        positions = idx + jnp.arange(S, dtype=jnp.int32)
+        cos, sin = layers.rope_tables(positions, cfg.resolved_head_dim,
+                                      cfg.rope_theta)
+        ck, cv = cache["k"], cache["v"]
+        kv_len = jnp.broadcast_to(idx + S, (Bt,)).astype(jnp.int32)
+        for li in range(cfg.num_layers):
+            p_l = jax.tree.map(lambda a: a[li], params["layers"])
+            lora_l = {t: jax.tree.map(lambda a: a[li], tp)
+                      for t, tp in qkv_banks.items()} or None
+            ctx = (LoRAContext(mode=proto.mode, params=lora_l, ids=ids,
+                               scaling=proto.scaling)
+                   if lora_l is not None else None)
+            xin = layers.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+            qh, kh, vh = layers._qkv(p_l["attn"], xin, cfg, ctx)
+            qh = layers.apply_rope(qh, cos, sin)
+            kh = layers.apply_rope(kh, cos, sin)
+            ck = jax.lax.dynamic_update_slice(
+                ck, kh.astype(ck.dtype)[None], (li, 0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cv, vh.astype(cv.dtype)[None], (li, 0, idx, 0, 0))
+            attn, delta = self._fused_attn(qh[:, 0], ck[li, :, :bucket],
+                                           cv[li, :, :bucket], kv_len,
+                                           ids, o_bank, li)
+            y = jnp.einsum("bhk,hkd->bd", attn, p_l["attn"]["wo"])
+            if delta is not None:
+                y = y + (proto.scaling * delta).astype(y.dtype)
+            x = x + y[:, None]
+            x = x + layers.mlp_fwd(
+                p_l["mlp"], layers.rms_norm(x, p_l["ln2"], cfg.norm_eps))
+        logits = layers.logits_fwd(params["embed"], x, cfg)
+        new_cache = dict(cache)
+        new_cache.update(k=ck, v=cv, index=idx + S)
+        return logits, new_cache
+
+    def _fused_attn(self, q1, k_l, v_l, kv_len, ids, o_bank, li):
+        """One layer's decode attention (+ fused o-delta when the bundles
+        carry an "o" target)."""
+        if o_bank is None:
+            return kops.decode_attention(q1, k_l, v_l, kv_len), None
+        if self.mode == "lora":
+            if self.decode_path == "fused_q8":
+                return kops.fused_lora_decode(
+                    q1, k_l, v_l, kv_len, ids,
+                    o_bank["A_q"][li], o_bank["B_q"][li],
+                    a_scale=o_bank["A_s"][li], b_scale=o_bank["B_s"][li])
+            return kops.fused_lora_decode(q1, k_l, v_l, kv_len, ids,
+                                          o_bank["A"][li], o_bank["B"][li])
+        if self.decode_path == "fused_q8":
+            sigma = (o_bank["sigma"][li] if "sigma" in o_bank else
+                     kref.adapter_dequant_ref(o_bank["sigma_q"][li],
+                                              o_bank["sigma_s"][li]))
+            return kops.fused_jd_decode(
+                q1, k_l, v_l, kv_len, ids, o_bank["U_q"][li],
+                o_bank["V_q"][li], sigma, o_bank["cluster_of"][li],
+                u_scale=o_bank["U_s"][li], v_scale=o_bank["V_s"][li])
+        return kops.fused_jd_decode(
+            q1, k_l, v_l, kv_len, ids, o_bank["U"][li], o_bank["V"][li],
+            o_bank["sigma"][li], o_bank["cluster_of"][li])
 
     # -- engine interface ---------------------------------------------------
     def adapter_bytes(self, aid: int) -> int:
@@ -91,6 +241,12 @@ class RealModelExecutor:
             idx[bdim] = slice(slot, slot + 1)
             return dst.at[tuple(idx)].set(src)
         self.cache = jax.tree.map(splice, self.cache, c1)
+        # advance the shared scalar index to the deepest prefilled slot so
+        # decode continues AFTER the prompt instead of overwriting it (the
+        # splice alone keeps dst's scalar leaves, i.e. a stale index)
+        self.cache["index"] = jnp.maximum(
+            self.cache["index"], jnp.asarray(req.prompt_len, jnp.int32))
+        self._host_len = max(self._host_len, int(req.prompt_len))
         self.slot_req[slot] = req.rid
         self.slot_adapter[slot] = req.adapter_id
         self.slot_tokens[slot] = int(jnp.argmax(logits[0, -1]))
@@ -102,8 +258,14 @@ class RealModelExecutor:
         ids = jnp.asarray(self.slot_adapter)
         # index must be per-slot; our cache uses a scalar index — decode at
         # max occupied length (padding slots attend junk but are ignored)
-        logits, self.cache = self._decode(self.params, self.bundles, tokens,
-                                          self.cache, ids)
+        if self.decode_path == "unfused":
+            logits, self.cache = self._decode(self.params, self.bundles,
+                                              tokens, self.cache, ids)
+        else:
+            logits, self.cache = self._decode(self.params, self.bundles,
+                                              tokens, self.cache, ids,
+                                              bucket=self._bucket())
+        self._host_len += 1
         out = {}
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         for slot, rid in enumerate(self.slot_req):
@@ -129,6 +291,75 @@ class RealModelExecutor:
                                    size=req.prompt_len).astype(np.int32)
         self.prefill_request(req, prompt)
         return time.perf_counter() - t0
+
+
+def _quantize_bundles(bundles: Dict, mode: str) -> Dict:
+    """Pack fp adapter banks into int8 values + per-output-channel f32
+    scales (`kernels/adapter_quant.py`).  Diag Sigma (already tiny) stays
+    fp; `cluster_of` passes through."""
+    def one_target(tp):
+        if "A" in tp:                              # raw LoRA
+            aq, a_s = adapter_quantize(tp["A"])
+            bq, b_s = adapter_quantize(tp["B"])
+            return {"A_q": aq, "A_s": a_s, "B_q": bq, "B_s": b_s}
+        uq, u_s = adapter_quantize(tp["U"])
+        vq, v_s = adapter_quantize(tp["V"], axis=-2)
+        out = {"U_q": uq, "U_s": u_s, "V_q": vq, "V_s": v_s,
+               "cluster_of": tp["cluster_of"]}
+        sigma = tp["sigma"]
+        if sigma.ndim >= 4:                        # (L, n, r, r) full
+            sq, s_s = adapter_quantize(sigma)
+            out["sigma_q"], out["sigma_s"] = sq, s_s
+        else:                                      # (L, n, r) diag
+            out["sigma"] = sigma
+        return out
+    return {"layers": {t: one_target(tp)
+                       for t, tp in bundles["layers"].items()}}
+
+
+def _dequantize_target(tp: Dict) -> Dict:
+    """fp32 view of one (possibly packed) target bank, traceable in-jit."""
+    if "A_q" in tp:
+        return {"A": kref.adapter_dequant_ref(tp["A_q"], tp["A_s"]),
+                "B": kref.adapter_dequant_ref(tp["B_q"], tp["B_s"])}
+    if "U_q" in tp:
+        out = {"U": kref.adapter_dequant_ref(tp["U_q"], tp["U_s"]),
+               "V": kref.adapter_dequant_ref(tp["V_q"], tp["V_s"]),
+               "cluster_of": tp["cluster_of"]}
+        out["sigma"] = (tp["sigma"] if "sigma" in tp else
+                        kref.adapter_dequant_ref(tp["sigma_q"],
+                                                 tp["sigma_s"]))
+        return out
+    return tp
+
+
+def _dequantize_bundles(bundles: Dict) -> Dict:
+    return {"layers": {t: _dequantize_target(tp)
+                       for t, tp in bundles["layers"].items()}}
+
+
+def derive_cost_constants(samples) -> Dict[str, float]:
+    """Fit the simulator's decode cost model t(B) ~= c0 + c1 * B to real
+    measured (batch, seconds) pairs from `benchmarks/real_decode.py`.
+
+    The fit keeps `CostModelExecutor`'s constants (`ServingHardware`'s
+    ``step_overhead`` and the per-token roofline term) auditable against
+    the fused executor's wall clock: the benchmark embeds this dict in its
+    ``--json`` output, so when the kernels speed up, the drift between the
+    simulated and real cost model is a number in the report instead of a
+    silent divergence."""
+    b = np.asarray([s[0] for s in samples], np.float64)
+    t = np.asarray([s[1] for s in samples], np.float64)
+    if b.size < 2 or np.all(b == b[0]):
+        raise ValueError("need samples at >= 2 distinct batch sizes")
+    M = np.stack([np.ones_like(b), b], axis=1)
+    coef, *_ = np.linalg.lstsq(M, t, rcond=None)
+    pred = M @ coef
+    denom = float(np.sum((t - t.mean()) ** 2)) or 1.0
+    return {"step_overhead_s": float(max(coef[0], 0.0)),
+            "per_slot_s": float(max(coef[1], 0.0)),
+            "r2": 1.0 - float(np.sum((t - pred) ** 2)) / denom,
+            "n_samples": int(b.size)}
 
 
 def _batch_dim(x) -> int:

@@ -382,6 +382,53 @@ def test_relax_never_lowers_a_ceiling_it_did_not_raise():
     assert policy.ceiling == policy.top
 
 
+def _decompress_pressure_args(util):
+    """Neither tier hot or cold-releasable, wire busy (quiet-relax gated
+    off), decode paying `util` of its window to KV dequant."""
+    return dict(ttfts=[0.4] * 20, tpots=[0.001] * 20,
+                decode_waits=[0.3] * 20, prefill_lags=[0.3] * 20,
+                n_prefill=1, n_decode=1, prefill_backlog=2,
+                decode_backlog=2, fabric_lag_s=1.0, decompress_util=util)
+
+
+def test_sustained_decompress_pressure_relaxes_ceiling_one_level():
+    """ROADMAP carry-over bugfix: decompress_util above the cold threshold
+    vetoes dec_cold, and a busy wire vetoes the quiet-relax branch — so a
+    raised ceiling used to stay raised forever while decode burned a
+    quarter of every window dequantizing.  Two consecutive pressured
+    windows must now relax one level (and stop at the bind floor)."""
+    policy = AdaptiveCompressionPolicy(AdaptiveCompressionConfig(
+        initial_ceiling=0))
+    a = _exhausted_joint(policy)
+    a.decide(1.0, [0.6] * 20, [], [0.05] * 20, [0.9] * 20,
+             fabric_lag_s=1.0, **_hot_prefill_args())   # ceiling -> int8
+    assert policy.ceiling_mode == "int8"
+    # first pressured window: not yet "sustained" — no relax
+    assert a.decide(2.0, **_decompress_pressure_args(0.3)) == (0, 0)
+    assert a.history[-1].d_comp == 0 and policy.ceiling_mode == "int8"
+    # second consecutive window above threshold: relax one level
+    assert a.decide(3.0, **_decompress_pressure_args(0.3)) == (0, 0)
+    h = a.history[-1]
+    assert h.d_comp == -1 and h.comp_ceiling == "raw"
+    # at the bind floor: continued pressure takes nothing more
+    assert a.decide(4.0, **_decompress_pressure_args(0.3)) == (0, 0)
+    assert a.history[-1].d_comp == 0 and policy.ceiling == 0
+
+
+def test_decompress_spike_alone_does_not_relax():
+    """A single pressured window (spike) resets when the next window is
+    clean — only *sustained* pressure moves the ceiling."""
+    policy = AdaptiveCompressionPolicy(AdaptiveCompressionConfig(
+        initial_ceiling=0))
+    a = _exhausted_joint(policy)
+    a.decide(1.0, [0.6] * 20, [], [0.05] * 20, [0.9] * 20,
+             fabric_lag_s=1.0, **_hot_prefill_args())   # ceiling -> int8
+    for t, util in ((2.0, 0.3), (3.0, 0.0), (4.0, 0.3)):
+        a.decide(t, **_decompress_pressure_args(util))
+        assert a.history[-1].d_comp == 0
+    assert policy.ceiling_mode == "int8"
+
+
 # ---------------------------------------------------------------------------
 # fabric edge-case bugfixes
 # ---------------------------------------------------------------------------
