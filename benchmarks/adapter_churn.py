@@ -37,11 +37,10 @@ import numpy as np
 from repro.configs import get_config
 from repro.serving.engine import ServingHardware
 from repro.serving.lifecycle import (AdapterLifecycle, ChurnSpec,
-                                     LifecycleConfig, make_churn_workload,
-                                     run_churn_study)
+                                     LifecycleConfig, make_churn_workload)
 from repro.serving.router import FleetConfig
 from repro.serving.simulator import (build_fleet, memory_matched_setup,
-                                     serving_footprint)
+                                     run_study, serving_footprint)
 from repro.serving.workload import WorkloadSpec
 
 try:
@@ -57,7 +56,7 @@ MODE = "jd"
 
 def churn_cell(cfg, n_requests: int, churn_rate: float,
                refresh_interval: float, seed: int = 0):
-    """One fleet under a churned workload; returns (reqs, stats, lc)."""
+    """One fleet under a churned workload; returns (reqs, report, lc)."""
     setting, cluster_of, budget = memory_matched_setup(cfg, N_BASE)
     # Appendix-F matching covers shared bases + Sigmas only; hot-registered
     # adapters serve RAW until a refresh lands, so the cell carries
@@ -80,15 +79,15 @@ def churn_cell(cfg, n_requests: int, churn_rate: float,
         churn_rate=churn_rate, lifetime=1.5, request_rate=6.0,
         update_prob=0.25, seed=seed + 1)
     reqs, events = make_churn_workload(spec)
-    stats = run_churn_study(fleet, lc, reqs, events, window=0.25)
-    return reqs, stats, lc
+    report = run_study(fleet, reqs, lifecycle=lc, events=events, window=0.25)
+    return reqs, report, lc
 
 
 def _p95(xs) -> float:
     return float(np.percentile(xs, 95)) if xs else 0.0
 
 
-def cell_metrics(reqs, stats, lc) -> dict:
+def cell_metrics(reqs, report, lc) -> dict:
     base_ttfts = [r.ttft for r in reqs
                   if r.adapter_id < N_BASE and r.ttft is not None]
     churn = {}
@@ -98,10 +97,10 @@ def cell_metrics(reqs, stats, lc) -> dict:
             if prev is None or r.arrival_time < prev.arrival_time:
                 churn[r.adapter_id] = r
     first_ttfts = [r.ttft for r in churn.values()]
-    return dict(rps=stats.total.throughput_rps,
+    return dict(rps=report.rps,
                 base_p95_ttft=_p95(base_ttfts),
                 first_p95_ttft=_p95(first_ttfts),
-                all_p95_ttft=stats.total.ttft_pct(95),
+                all_p95_ttft=report.stats.total.ttft_pct(95),
                 lc=lc.stats.to_dict())
 
 
@@ -114,9 +113,9 @@ def main(quick: bool = True, json_path: Optional[str] = None):
     rows, metrics, out = [], {}, {}
     for name, rate, cadence in cells:
         t0 = time.perf_counter()
-        reqs, stats, lc = churn_cell(cfg, n_requests, rate, cadence)
+        reqs, report, lc = churn_cell(cfg, n_requests, rate, cadence)
         dt = (time.perf_counter() - t0) * 1e6
-        m = cell_metrics(reqs, stats, lc)
+        m = cell_metrics(reqs, report, lc)
         out[name] = m
         d = m["lc"]
         derived = (f"rps={m['rps']:.2f};base_p95_ttft={m['base_p95_ttft']:.4f};"

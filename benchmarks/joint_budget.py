@@ -75,19 +75,22 @@ def phase_shift_workload(alpha: float = 1.0, seed: int = 0,
 
 def static_split_cell(cfg, requests: List[Request], n_prefill: int,
                       n_decode: int, mode: str = "jd",
-                      fabric: Optional[FabricConfig] = None):
+                      fabric: Optional[FabricConfig] = None,
+                      report: bool = False):
     """A fixed prefill:decode split of the budget (no autoscaling)."""
     return run_elastic_study(
         cfg, mode, N_ADAPTERS, [dataclasses.replace(r) for r in requests],
         FleetConfig(n_replicas=n_decode, policy="cluster_affinity"),
-        prefill_cfg=PrefillConfig(n_workers=n_prefill, fabric=fabric))
+        prefill_cfg=PrefillConfig(n_workers=n_prefill, fabric=fabric),
+        report=report)
 
 
 def joint_cell(cfg, requests: List[Request], total_accels: int,
                slo_ttft: float, mode: str = "jd",
                n_prefill0: int = 2, n_decode0: int = 2,
                fabric: Optional[FabricConfig] = None,
-               cooldown: int = 0, interval: float = 0.05):
+               cooldown: int = 0, interval: float = 0.05,
+               report: bool = False):
     """The jointly autoscaled cell over the same fixed budget."""
     return run_elastic_study(
         cfg, mode, N_ADAPTERS, [dataclasses.replace(r) for r in requests],
@@ -96,7 +99,8 @@ def joint_cell(cfg, requests: List[Request], total_accels: int,
         slo=SLOConfig(ttft_p95=slo_ttft),
         budget_cfg=BudgetConfig(total_accelerators=total_accels),
         joint_cfg=JointAutoscalerConfig(
-            decision_interval=interval, cooldown_intervals=cooldown))
+            decision_interval=interval, cooldown_intervals=cooldown),
+        report=report)
 
 
 def main(quick: bool = True, json_path: Optional[str] = None):
@@ -112,18 +116,9 @@ def main(quick: bool = True, json_path: Optional[str] = None):
     rows = []
     metrics = {}
 
-    def record(name, stats, dt):
-        d = stats.to_dict()
-        derived = (f"rps={d['throughput_rps']:.2f};"
-                   f"ttft_p95={d['ttft_p95_s'] * 1e3:.1f}ms;"
-                   f"tpot_p95={d['tpot_p95_s'] * 1e3:.2f}ms;"
-                   f"met_slo={d['ttft_p95_s'] <= slo}")
-        if "n_prefill_final" in d:
-            derived += (f";split={d['n_prefill_final']}"
-                        f":{d['n_replicas_final']};"
-                        f"scale_events={d['scale_events']}")
-        rows.append(csv_row(name, dt, derived))
-        metrics[name] = {"rps": d["throughput_rps"]}
+    def record(name, report, dt):
+        rows.append(csv_row(name, dt, report.derived(slo_ttft=slo)))
+        metrics[name] = report.metrics()
 
     for skew_name, alpha in skews:
         reqs = phase_shift_workload(alpha=alpha)
@@ -136,17 +131,17 @@ def main(quick: bool = True, json_path: Optional[str] = None):
                           else [(p, total - p) for p in range(1, total)])
                 for n_pf, n_dec in splits:
                     t0 = time.perf_counter()
-                    stats = static_split_cell(cfg, reqs, n_pf, n_dec,
-                                              fabric=fabric)
+                    report = static_split_cell(cfg, reqs, n_pf, n_dec,
+                                               fabric=fabric, report=True)
                     record(f"joint_{skew_name}_b{total}_{fab_name}"
                            f"_static{n_pf}x{n_dec}",
-                           stats, (time.perf_counter() - t0) * 1e6)
+                           report, (time.perf_counter() - t0) * 1e6)
                 # the joint autoscaler over the same pool
                 t0 = time.perf_counter()
-                stats = joint_cell(cfg, reqs, total, slo_ttft=slo,
-                                   fabric=fabric)
+                report = joint_cell(cfg, reqs, total, slo_ttft=slo,
+                                    fabric=fabric, report=True)
                 record(f"joint_{skew_name}_b{total}_{fab_name}_auto",
-                       stats, (time.perf_counter() - t0) * 1e6)
+                       report, (time.perf_counter() - t0) * 1e6)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(metrics, f, indent=2, sort_keys=True)

@@ -1,0 +1,208 @@
+"""Mid-stream live-migration study: instant scale-down vs drain.
+
+PR 9's acceptance cell.  A fleet of six decode replicas (the full
+6-accelerator budget) serves a hot Zipf(1.0) workload; mid-run one
+replica must give its budget slice back.  Two retirement disciplines
+compete:
+
+* **drain** — the replica stops taking new work and runs its queue to
+  completion; the slice is free only when the last straggler finishes,
+  and the replacement capacity (the re-invested slice) comes online at
+  that drain-end instant;
+* **migrate** — every request still on the replica, running mid-decode
+  or queued, is checkpointed (KV pages freed at the source immediately),
+  shipped int8-quantized over the migration fabric, and re-admitted on a
+  surviving replica token-exactly; the slice is free AT the retire
+  instant and the replacement comes online immediately.
+
+Both disciplines spend the same budget — the comparison is purely WHEN
+the slice is released and re-invested.  Acceptance (asserted below and
+gated by the committed baseline):
+
+* migrate releases the slice strictly sooner than drain
+  (``release_speedup`` > 1);
+* instant scale-down beats the drain on p95 TTFT over the post-retire
+  window (requests arriving after the retire event) —
+  ``post_ttft_ratio`` > 1;
+* every request in the migrate cell finishes with exactly the control
+  cell's generated-token count (the cost-model face of invariant M1;
+  tests/test_migration.py pins content-level token exactness on the
+  real executor), and at least one retire-triggered migration actually
+  happened.
+
+CSV columns: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.serving.engine import ServingHardware
+from repro.serving.migration import MigrationConfig, MigrationPolicy
+from repro.serving.request import Request
+from repro.serving.resources import FabricConfig, KVCompressionConfig
+from repro.serving.router import FleetConfig
+from repro.serving.simulator import (StudyEvent, build_engine, build_fleet,
+                                     memory_matched_setup, run_study)
+from repro.serving.workload import WorkloadSpec, make_workload
+
+try:
+    from .common import csv_row
+except ImportError:                      # run as a script, not a module
+    from common import csv_row
+
+N_BASE = 128
+MODE = "jd"
+N_REPLICAS = 6                           # the whole accelerator budget
+RETIRE_IDX = N_REPLICAS - 1
+WINDOW = 0.02
+
+
+def hot_workload(n_requests: int, seed: int = 0) -> List[Request]:
+    """Zipf(1.0)-skewed Poisson stream with generations long enough that
+    the retire event lands mid-decode for a full batch."""
+    return make_workload(WorkloadSpec(
+        n_requests=n_requests, n_adapters=N_BASE,
+        popularity="zipf", zipf_alpha=1.0,
+        arrival="poisson", arrival_rate=520.0,
+        prompt_len_mean=128, prompt_len_std=16,
+        new_tokens=48, seed=seed))
+
+
+def _setup(cfg):
+    setting, cluster_of, budget = memory_matched_setup(cfg, N_BASE)
+    fabric = FabricConfig(bandwidth=50e9, chunk_bytes=1 << 20,
+                          compression=KVCompressionConfig(mode="int8"))
+    # least_outstanding: routing by live queue depth lets the re-invested
+    # replica fill at the natural service rate (the affinity policies'
+    # cumulative routed-load estimate would dump a full-history backlog
+    # on any replica that joins mid-run)
+    fleet_cfg = FleetConfig(n_replicas=N_REPLICAS, policy="least_outstanding",
+                            migration_fabric=fabric)
+    return setting, cluster_of, budget, fleet_cfg
+
+
+def migration_cell(cfg, requests: List[Request], retire_t: Optional[float],
+                   migrate: bool, reinvest_t: Optional[float] = None):
+    """One retirement discipline over a fresh fleet.
+
+    ``retire_t=None`` is the no-event control.  With ``migrate`` the
+    retire is instant scale-down through an attached
+    :class:`MigrationPolicy` (priority preemption and defrag disabled so
+    the pre-retire trajectory is identical across cells).  ``reinvest_t``
+    attaches the replacement replica — the re-invested budget slice — at
+    that instant (the retire time for migrate, the discovered drain end
+    for the drain cell)."""
+    setting, cluster_of, budget, fleet_cfg = _setup(cfg)
+    hw = ServingHardware()
+    fleet = build_fleet(cfg, MODE, N_BASE, budget, fleet_cfg, hw,
+                        cluster_of, setting)
+    reqs = requests                      # caller owns the copy
+    if retire_t is None:
+        return run_study(fleet, reqs)
+    policy = (MigrationPolicy(MigrationConfig(
+        preempt_priority=False, defrag=False)) if migrate else None)
+    events = [StudyEvent(retire_t,
+                         lambda st: st.retire_decode(RETIRE_IDX,
+                                                     migrate=migrate),
+                         label="retire")]
+    if reinvest_t is not None:
+        events.append(StudyEvent(
+            reinvest_t,
+            lambda st: st.attach_engine(build_engine(
+                cfg, MODE, N_BASE, budget, hw, cluster_of, setting)),
+            label="reinvest"))
+    return run_study(fleet, reqs, events=events, migration=policy,
+                     window=WINDOW)
+
+
+def release_time(reqs: List[Request], retire_t: float) -> float:
+    """When the retired replica's hardware is actually free: the last
+    finish on it after the retire event (the drain tail), or the retire
+    instant itself when it was emptied by migration."""
+    tail = [r.finish_time for r in reqs
+            if r.replica == RETIRE_IDX and r.finish_time is not None
+            and r.finish_time > retire_t]
+    return max(tail) if tail else retire_t
+
+
+def post_ttft_p95(reqs: List[Request], retire_t: float) -> float:
+    xs = [r.ttft for r in reqs
+          if r.arrival_time >= retire_t and r.ttft is not None]
+    return float(np.percentile(xs, 95)) if xs else 0.0
+
+
+def main(quick: bool = True, json_path: Optional[str] = None):
+    cfg = get_config("mistral-7b")
+    n_requests = 600 if quick else 1500
+    base = hot_workload(n_requests)
+    retire_t = 0.4 * base[-1].arrival_time
+    rows, metrics = [], {}
+    cells = {}
+
+    def run(name, **kw):
+        reqs = [dataclasses.replace(r) for r in base]
+        t0 = time.perf_counter()
+        report = migration_cell(cfg, reqs, **kw)
+        dt = (time.perf_counter() - t0) * 1e6
+        cells[name] = (reqs, report)
+        rows.append(csv_row(f"migrate_{name}", dt, report.derived()))
+        metrics[f"migrate_{name}"] = report.metrics()
+        return reqs, report
+
+    run("control", retire_t=None, migrate=False)
+    # pass 1 discovers the drain tail: how long the slice stays occupied
+    drain_reqs, _ = run("drain", retire_t=retire_t, migrate=False)
+    rel_drain = release_time(drain_reqs, retire_t)
+    # pass 2 re-invests the slice the instant the drain actually frees it
+    run("drain_reinvest", retire_t=retire_t, migrate=False,
+        reinvest_t=rel_drain)
+    mig_reqs, mig_report = run("migrate", retire_t=retire_t, migrate=True,
+                               reinvest_t=retire_t)
+    rel_mig = release_time(mig_reqs, retire_t)
+
+    # -- acceptance --------------------------------------------------------
+    mig = mig_report.migration
+    assert mig is not None and mig["n_retire_migrations"] > 0, mig
+    assert rel_mig < rel_drain, (rel_mig, rel_drain)
+    p95_drain = post_ttft_p95(cells["drain_reinvest"][0], retire_t)
+    p95_mig = post_ttft_p95(mig_reqs, retire_t)
+    assert p95_mig < p95_drain, (p95_mig, p95_drain)
+    # token parity with the unmigrated control, request by request
+    ctrl_gen = {r.rid: r.generated for r in cells["control"][0]}
+    mig_gen = {r.rid: r.generated for r in mig_reqs}
+    assert mig_gen == ctrl_gen, "migrated cell diverged from control"
+    assert all(r.finish_time is not None for r in mig_reqs)
+
+    release_speedup = rel_drain / rel_mig
+    post_ratio = p95_drain / p95_mig
+    rows.append(csv_row(
+        "migrate_headline", 0.0,
+        f"retire_t={retire_t:.3f}s;release_drain={rel_drain:.3f}s;"
+        f"release_migrate={rel_mig:.3f}s;release_speedup={release_speedup:.2f}x;"
+        f"post_ttft_ratio={post_ratio:.2f};"
+        f"migrations={mig['n_migrations']};"
+        f"wire_mb={mig['kv_wire_bytes'] / 1e6:.1f}"))
+    metrics["migrate_headline"] = {"release_speedup": release_speedup,
+                                   "post_ttft_ratio": post_ratio}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep for CI smoke")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write deterministic metrics as JSON "
+                         "(CI perf gate; see benchmarks/check_regression.py)")
+    args = ap.parse_args()
+    print("\n".join(main(quick=args.quick, json_path=args.json)))

@@ -434,121 +434,16 @@ def run_joint_autoscaled(fleet: Fleet, requests: Sequence[Request],
     work, and their accelerators return to the pool at retire time (the
     drain tail is the hand-over cost).  JD clusters re-home on decode
     membership changes.
+
+    Thin wrapper over the unified window loop
+    (:func:`repro.serving.simulator.run_study`), kept for its established
+    signature; proven bit-exact against the committed joint baselines.
     """
-    if fleet.prefill_tier is None:
-        raise ValueError("joint autoscaling needs a disaggregated fleet "
-                         "(prefill_tier)")
-    tier = fleet.prefill_tier
-    budget = autoscaler.budget
-    n_dec0 = len(fleet._active_idxs())
-    need = (tier.n_active * budget.cfg.cost("prefill")
-            + n_dec0 * budget.cfg.cost("decode"))
-    if need > budget.available:
-        # fail at construction time with a clear message instead of dying
-        # mid-run inside HardwareBudget.allocate
-        raise ValueError(
-            f"budget too small for the initial split: {tier.n_active} "
-            f"prefill x {budget.cfg.cost('prefill')} accels + {n_dec0} "
-            f"decode x {budget.cfg.cost('decode')} accels needs {need}, "
-            f"{budget.available} free of {budget.cfg.total_accelerators}")
-    for _ in range(tier.n_active):
-        budget.allocate("prefill")
-    for _ in range(n_dec0):
-        budget.allocate("decode")
-    if autoscaler.comp_policy is None and tier.fabric.policy is not None:
-        autoscaler.bind_compression(tier.fabric.policy)
-
-    reqs = sorted(requests, key=lambda r: r.arrival_time)
-    finished: List[Request] = []
-    for eng in fleet.engines:
-        eng.on_finish = finished.append
-
-    dt = autoscaler.cfg.decision_interval
-    t = dt
-    i = 0
-    window: List[Request] = []       # this window's arrivals (stamped)
-    recent: List[Request] = []       # arrivals still possibly in prefill
-    pending_decomp: List[Request] = []   # compressed, dequant not yet billed
-    while True:
-        j = i
-        while j < len(reqs) and reqs[j].arrival_time < t:
-            j += 1
-        window = reqs[i:j]
-        if j > i:
-            fleet.submit(window)
-            recent.extend(window)
-            pending_decomp.extend(r for r in window
-                                  if r.kv_decompress_cost > 0)
-            i = j
-        fleet.advance_to(t)
-        ttfts = [r.ttft for r in finished if r.ttft is not None]
-        tpots = [r.tpot for r in finished if r.tpot is not None]
-        dwaits = [r.decode_wait for r in finished
-                  if r.decode_wait is not None]
-        # bill dequantization to the window it actually ran in (admission
-        # stamps decompress_done_time), not the window the request finishes
-        decomp_total = sum(r.kv_decompress_cost for r in pending_decomp
-                           if r.decompress_done_time is not None
-                           and r.decompress_done_time <= t)
-        pending_decomp = [r for r in pending_decomp
-                          if r.decompress_done_time is None
-                          or r.decompress_done_time > t]
-        finished.clear()
-        outstanding = sum(len(eng.running) + len(eng.waiting)
-                          for eng in fleet.engines)
-        if i >= len(reqs) and outstanding == 0:
-            break
-        if i >= len(reqs):
-            # drain phase: routing is over; further decisions could only
-            # inflate scale_events with idle capacity
-            t += dt
-            continue
-        # the prefill tier simulates eagerly, so "queued at t" is virtual:
-        # arrived but not yet prefill-complete by the window end
-        recent = [r for r in recent
-                  if r.prefill_done_time is None or r.prefill_done_time > t]
-        prefill_backlog = sum(1 for r in recent if r.arrival_time <= t)
-        pre_lags = [r.prefill_lag for r in window
-                    if r.prefill_lag is not None]
-        decode_backlog = sum(
-            len(eng.running)
-            + sum(1 for r in eng.waiting if r.ready_time <= t)
-            for eng in fleet.engines)
-        n_dec_active = len(fleet._active_idxs())
-        # unified paging: the worst active replica's page pressure (0 for
-        # non-paged engines) — admissions block on pages, so this sees a
-        # memory bottleneck latency percentiles can miss
-        kv_page_util = max(
-            (1.0 - fleet.engines[k].pool.free_pages
-             / fleet.engines[k].pool.total_pages
-             for k in fleet._active_idxs()
-             if fleet.engines[k].pool is not None), default=0.0)
-        d_pre, d_dec = autoscaler.decide(
-            t, ttfts, tpots, dwaits, pre_lags, tier.n_active,
-            n_dec_active, prefill_backlog, decode_backlog,
-            decompress_util=decomp_total / (dt * max(n_dec_active, 1)),
-            fabric_lag_s=max(0.0, tier.fabric.free_at - t),
-            kv_page_util=kv_page_util)
-        if d_dec < 0:
-            fleet.retire_replica(fleet._active_idxs()[-1])
-            budget.release("decode")
-        if d_pre < 0:
-            tier.retire_worker(tier._active_idxs()[-1])
-            budget.release("prefill")
-        if d_pre > 0:
-            budget.allocate("prefill")
-            tier.add_worker(prefill_factory(), now=t)
-        if d_dec > 0:
-            budget.allocate("decode")
-            eng = decode_factory()
-            eng.on_finish = finished.append
-            fleet.add_replica(eng, now=t)
-        t += dt
-    stats = fleet.run(max_steps)
-    stats.n_prefill_final = tier.n_active
-    stats.scale_events += tier.scale_events
-    stats.budget = budget.to_dict()
-    return stats
+    from .simulator import run_study     # local: simulator imports us
+    return run_study(fleet, requests, autoscaler=autoscaler,
+                     decode_factory=decode_factory,
+                     prefill_factory=prefill_factory,
+                     max_steps=max_steps).stats
 
 
 def run_autoscaled(fleet: Fleet, requests: Sequence[Request],
@@ -565,57 +460,12 @@ def run_autoscaled(fleet: Fleet, requests: Sequence[Request],
     recently added active replica (drains, no new work).  Membership
     changes re-home JD clusters.  After the last arrival the fleet runs to
     completion and merged stats are returned.
+
+    Thin wrapper over the unified window loop
+    (:func:`repro.serving.simulator.run_study`), kept for its established
+    signature; proven bit-exact against the committed elastic baselines.
     """
-    reqs = sorted(requests, key=lambda r: r.arrival_time)
-    finished: List[Request] = []
-
-    def on_finish(r: Request) -> None:
-        finished.append(r)
-
-    for eng in fleet.engines:
-        eng.on_finish = on_finish
-
-    dt = autoscaler.cfg.decision_interval
-    t = dt
-    i = 0
-    while True:
-        j = i
-        while j < len(reqs) and reqs[j].arrival_time < t:
-            j += 1
-        if j > i:
-            fleet.submit(reqs[i:j])
-            i = j
-        fleet.advance_to(t)
-        ttfts = [r.ttft for r in finished if r.ttft is not None]
-        tpots = [r.tpot for r in finished if r.tpot is not None]
-        finished.clear()
-        outstanding = sum(len(eng.running) + len(eng.waiting)
-                          for eng in fleet.engines)
-        if i >= len(reqs) and outstanding == 0:
-            break
-        # decisions see only decode-actionable work: requests whose KV is
-        # still in prefill/transfer (ready_time > t) cannot be helped by
-        # another decode replica, and counting them would drive useless
-        # scale-up against a prefill-tier bottleneck
-        if i >= len(reqs):
-            # drain phase: routing is over, so a new replica could never
-            # receive work — taking further decisions would only inflate
-            # scale_events / n_replicas_final with idle replicas
-            t += dt
-            continue
-        backlog = sum(
-            len(eng.running)
-            + sum(1 for r in eng.waiting if r.ready_time <= t)
-            for eng in fleet.engines)
-        active = fleet._active_idxs()
-        delta = autoscaler.decide(t, ttfts, tpots, len(active), backlog)
-        if delta > 0:
-            for _ in range(delta):
-                eng = engine_factory()
-                eng.on_finish = on_finish
-                fleet.add_replica(eng, now=t)
-        elif delta < 0:
-            for _ in range(-delta):
-                fleet.retire_replica(fleet._active_idxs()[-1])
-        t += dt
-    return fleet.run(max_steps)
+    from .simulator import run_study     # local: simulator imports us
+    return run_study(fleet, requests, autoscaler=autoscaler,
+                     decode_factory=engine_factory,
+                     max_steps=max_steps).stats

@@ -201,6 +201,19 @@ class EngineConfig:
     # ``adapter_budget_bytes`` is ignored.  None = legacy static split,
     # bit-exact with the pre-paging engine.
     pool: Optional[PagedPoolConfig] = None
+    # KV page reservation policy (paged engines only).  "worst_case"
+    # reserves prompt + max_new_tokens pages at admission — decode never
+    # fails mid-request (bit-exact with every committed baseline).
+    # "on_demand" reserves only the prompt (+1 token) and grows the
+    # reservation page by page as decode crosses 128-token boundaries, so
+    # long-max_new_tokens tails stop holding idle pages; when the pool is
+    # exhausted mid-growth the engine preempts a running victim through
+    # the live-migration machinery (ServingEngine.preempt).
+    kv_reserve: str = "worst_case"
+    # eviction-fairness cap consulted by the growth path: a request
+    # already bounced this many times is not picked as a victim while an
+    # uncapped candidate exists (Scheduler.pick_victim, invariant M5)
+    max_preemptions: int = 3
     # real-executor decode path (PR 8): "unfused" keeps the generic
     # transformer decode step (bit-exact with every committed baseline);
     # "fused" runs the one-pass flash-decode + adapter-delta kernel
@@ -222,6 +235,11 @@ class ServingEngine:
         if ex_path is not None and ex_path != cfg.decode_path:
             raise ValueError(f"engine decode_path={cfg.decode_path!r} but "
                              f"the executor was built with {ex_path!r}")
+        if cfg.kv_reserve not in ("worst_case", "on_demand"):
+            raise ValueError(f"kv_reserve must be 'worst_case' or "
+                             f"'on_demand', got {cfg.kv_reserve!r}")
+        if cfg.kv_reserve == "on_demand" and cfg.pool is None:
+            raise ValueError("kv_reserve='on_demand' requires a paged pool")
         self.scheduler = Scheduler(cfg.scheduler, cluster_of)
         self.pool: Optional[PagedPool] = None
         if cfg.pool is not None:
@@ -241,6 +259,11 @@ class ServingEngine:
         self.running: List[Request] = []
         self.waiting: List[Request] = []
         self.on_finish = None        # optional callback(req) on completion
+        # optional callback(req) -> bool when the growth path must evict a
+        # running request: return True if the victim was live-migrated to
+        # another replica (MigrationPolicy wires Fleet.migrate here); False
+        # (or no handler) falls back to a local host swap (see preempt)
+        self.on_preempt = None
         self._kv_held: Dict[int, int] = {}   # rid -> reserved KV pages
         self._admitting: Optional[int] = None  # adapter id mid-reservation
         self._page_blocked = False   # last _admit deferred a ready request
@@ -255,16 +278,21 @@ class ServingEngine:
         return prot
 
     def _kv_pages(self, req: Request) -> int:
-        """Worst-case KV pages for `req`, reserved up front at admission so
-        decode never fails mid-request (a spec decision — see
+        """KV pages to reserve for `req` at admission: the full worst case
+        (``prompt + max_new_tokens``) so decode never fails mid-request, or
+        just the blocks its KV occupies *now* plus the next token under
+        ``kv_reserve="on_demand"`` (grown per step by `_grow_kv`; see
         docs/architecture.md)."""
-        tokens = req.prompt_len + req.max_new_tokens
+        if self.cfg.kv_reserve == "on_demand":
+            tokens = req.prompt_len + req.generated + 1
+        else:
+            tokens = req.prompt_len + req.max_new_tokens
         return self.pool.pages_for(tokens * self.executor.fp.kv_bytes_per_token)
 
     def _reserve(self, req: Request, pending_adapter_pages: int
                  ) -> Optional[int]:
-        """Try to fund `req`'s admission from the pool: its worst-case KV
-        pages (reclaiming cold adapters if needed) AND, if its adapter is
+        """Try to fund `req`'s admission from the pool: its KV reservation
+        (`_kv_pages`; reclaiming cold adapters if needed) AND, if its adapter is
         not resident, the adapter's pages.  `pending_adapter_pages` counts
         adapters of requests admitted earlier in the same round whose load
         has not been issued yet, so one round cannot overcommit.  Returns
@@ -341,21 +369,115 @@ class ServingEngine:
                 self.stats.swap_time += stall
                 self.stats.compute_time += t_pre
                 r.prefilled = True
-            elif (r.kv_decompress_cost > 0
-                  and r.decompress_done_time is None):
-                # compressed disagg handoff: the KV arrives quantized and
-                # is dequantized on THIS replica, charging the compute to
-                # the decode tier.  Dequant streams per landed chunk and
-                # overlaps the transfer tail (mirroring the first-chunk
-                # admission model), so the WHOLE cost is charged once
-                # here — decompress_done_time marks when the replica paid
-                # it, which can precede kv_landed_time
-                self.clock += r.kv_decompress_cost
-                self.stats.decompress_time += r.kv_decompress_cost
-                merge_mode_dict(self.stats.decompress_by_mode,
-                                {r.wire_mode: r.kv_decompress_cost})
-                r.decompress_done_time = self.clock
+            else:
+                if (r.kv_decompress_cost > 0
+                        and r.decompress_done_time is None):
+                    # compressed disagg handoff: the KV arrives quantized
+                    # and is dequantized on THIS replica, charging the
+                    # compute to the decode tier.  Dequant streams per
+                    # landed chunk and overlaps the transfer tail
+                    # (mirroring the first-chunk admission model), so the
+                    # WHOLE cost is charged once here —
+                    # decompress_done_time marks when the replica paid it,
+                    # which can precede kv_landed_time
+                    self.clock += r.kv_decompress_cost
+                    self.stats.decompress_time += r.kv_decompress_cost
+                    merge_mode_dict(self.stats.decompress_by_mode,
+                                    {r.wire_mode: r.kv_decompress_cost})
+                    r.decompress_done_time = self.clock
+                if r.kv_restore_cost > 0:
+                    # migrated-in checkpoint (wire dequant) or a locally
+                    # preempted request returning from host (swap round
+                    # trip): the admitting replica pays the pending
+                    # restore exactly once, then the request resumes at
+                    # the same `generated` position it was stopped at
+                    self.clock += r.kv_restore_cost
+                    self.stats.restore_time += r.kv_restore_cost
+                    r.kv_restore_cost = 0.0
             self.running.append(r)
+
+    # -- live migration / preemption (PR 9) ---------------------------------
+    def checkpoint(self, req: Request) -> int:
+        """Detach `req` from this engine for migration or preemption.
+
+        Removes it from its decode slot (or the waiting queue) and frees
+        its KV page reservation IMMEDIATELY — the pages are back in the
+        source pool at checkpoint time, not when the checkpoint lands on
+        its target (invariant M3) — and returns the raw KV bytes that
+        must move: the prompt's blocks plus every generated token's (the
+        full decoded prefix; token-exact resume needs all of it).  A
+        request with no KV on this replica yet (colocated, still
+        waiting) checkpoints at zero bytes.  The caller owns what
+        happens next: `Fleet.migrate` ships the bytes over the fabric,
+        :meth:`preempt`'s local fallback swaps them to host."""
+        if req in self.running:
+            self.running.remove(req)
+        elif req in self.waiting:
+            self.waiting.remove(req)
+        else:
+            raise ValueError(f"request {req.rid} is not on this engine")
+        if self.pool is not None:
+            self.pool.free("kv", self._kv_held.pop(req.rid, 0))
+        if not req.prefilled and req.generated == 0:
+            return 0
+        fp = getattr(self.executor, "fp", None)
+        if fp is None:
+            return 0
+        return (req.prompt_len + req.generated) * fp.kv_bytes_per_token
+
+    def preempt(self, victim: Request) -> None:
+        """Evict `victim` from its decode slot (page pressure, or a
+        higher-priority tenant via serving/migration.py).
+
+        The preferred path is live migration: `on_preempt` checkpoints
+        the victim and rehomes it on another replica over the fabric.
+        Without a handler — or when it declines (single-replica fleet) —
+        the checkpoint swaps to HOST memory instead: pages free now, and
+        the swap-out + swap-in DMA round trip is charged when the victim
+        is re-admitted (`Request.kv_restore_cost`, counted as
+        restore_time).  Either way the victim keeps its `generated`
+        position: preemption delays a request, never restarts it."""
+        victim.preemptions += 1
+        self.stats.n_preempted += 1
+        if self.on_preempt is not None and self.on_preempt(victim):
+            return
+        nbytes = self.checkpoint(victim)
+        if nbytes > 0:
+            dma = self.cache.cfg.dma
+            victim.kv_restore_cost += 2 * (dma.latency
+                                           + nbytes / dma.bandwidth)
+        self.submit([victim])
+
+    def _grow_kv(self) -> None:
+        """Mid-decode reservation growth (``kv_reserve="on_demand"``):
+        before the step writes each running request's next token, extend
+        its reservation to cover ``prompt + generated + 1`` tokens.
+        Growth that cannot be funded even after reclaiming cold adapters
+        preempts a victim (lowest priority, then smallest KV — never the
+        grower itself) and retries."""
+        bpt = self.executor.fp.kv_bytes_per_token
+        for r in list(self.running):
+            if r not in self.running:    # preempted by an earlier grower
+                continue
+            need = self.pool.pages_for((r.prompt_len + r.generated + 1) * bpt)
+            while need > self._kv_held.get(r.rid, 0):
+                held = self._kv_held.get(r.rid, 0)
+                if self.pool.alloc_with_reclaim("kv", need - held):
+                    self._kv_held[r.rid] = need
+                    break
+                victim = (self.scheduler.pick_victim(
+                              self.running, protect=(r.rid,),
+                              max_moves=self.cfg.max_preemptions)
+                          # all candidates at the fairness cap: progress
+                          # beats fairness when the alternative is aborting
+                          or self.scheduler.pick_victim(self.running,
+                                                        protect=(r.rid,)))
+                if victim is None:
+                    raise MemoryError(
+                        f"cannot grow the KV reservation of request "
+                        f"{r.rid} and no running request is preemptible: "
+                        f"{self.pool.to_dict()}")
+                self.preempt(victim)
 
     def _prefetch_waiting(self) -> None:
         """Opportunistically warm adapters of queued requests.  Low priority:
@@ -392,6 +514,10 @@ class ServingEngine:
                     f"paged pool cannot fit a single request: "
                     f"{self.pool.to_dict()}")
             return True
+        if self.pool is not None and self.cfg.kv_reserve == "on_demand":
+            self._grow_kv()
+            if not self.running:     # the whole batch was preempted away
+                return True
         # ensure all batch adapters resident (overlapped DMA; stall on max)
         batch_ids = {weight_key(r) for r in self.running}
         t_ready = self.clock

@@ -588,43 +588,11 @@ def run_churn_study(fleet: Fleet, lifecycle: AdapterLifecycle,
     nothing retroactively — in-flight requests drain per invariant L4/L5),
     advance the lifecycle (rollout pacing) and every replica to the window
     end.  Returns merged :class:`~repro.serving.router.FleetStats` with
-    ``stats.lifecycle`` filled in."""
-    reqs = sorted(requests, key=lambda r: r.arrival_time)
-    evs = sorted(events, key=lambda e: e.t)
-    t = window
-    i = j = 0
-    while True:
-        while i < len(reqs) or j < len(evs):
-            r_t = reqs[i].arrival_time if i < len(reqs) else float("inf")
-            e_t = evs[j].t if j < len(evs) else float("inf")
-            if min(r_t, e_t) >= t:
-                break
-            if e_t <= r_t:
-                apply_event(lifecycle, evs[j])
-                j += 1
-            else:
-                k = i                # batch arrivals up to the next event
-                until = min(t, e_t)
-                while k < len(reqs) and reqs[k].arrival_time < until:
-                    k += 1
-                batch = reqs[i:k]
-                lifecycle.stamp(batch)
-                fleet.submit(batch)
-                i = k
-        # advance the data plane through the window BEFORE the control
-        # plane acts at its edge: a basis swap moves a replica's clock
-        # forward, and ticking first would let it cut in line ahead of
-        # arrivals queued within the window
-        fleet.advance_to(t)
-        lifecycle.tick(t)
-        outstanding = sum(len(eng.running) + len(eng.waiting)
-                          for eng in fleet.engines)
-        if i >= len(reqs) and j >= len(evs) and outstanding == 0:
-            break
-        t += window
-    stats = fleet.run(max_steps)
-    # let a rollout that was mid-flight at drain finish against the final
-    # fleet clock so its bookkeeping (versions, shrink) settles
-    lifecycle.tick(stats.total.wall_time + lifecycle.cfg.refresh_interval)
-    stats.lifecycle = lifecycle.stats.to_dict()
-    return stats
+    ``stats.lifecycle`` filled in.
+
+    Thin wrapper over the unified window loop
+    (:func:`repro.serving.simulator.run_study`), kept for its established
+    signature; proven bit-exact against the committed churn baseline."""
+    from .simulator import run_study     # local: simulator imports us
+    return run_study(fleet, requests, lifecycle=lifecycle, events=events,
+                     window=window, max_steps=max_steps).stats

@@ -279,6 +279,58 @@ class RealModelExecutor:
         slot = self.slot_req.index(rid)
         self.slot_req[slot] = None
 
+    # -- live migration (PR 9) ----------------------------------------------
+    def export_slot(self, rid: int) -> Dict:
+        """Checkpoint a request's decode state for live migration: its KV
+        slice (every batched cache leaf at the request's slot), the last
+        sampled token, and the filled depth.  The slot is NOT released —
+        the engine frees it via :meth:`release` once the checkpoint is on
+        the wire (invariant M3)."""
+        slot = self.slot_req.index(rid)
+
+        def take(x):
+            if x.ndim == 0:
+                return x
+            bdim = _batch_dim(x)
+            idx = [slice(None)] * x.ndim
+            idx[bdim] = slice(slot, slot + 1)
+            return x[tuple(idx)]
+
+        return {"kv": jax.tree.map(take, self.cache),
+                "adapter": int(self.slot_adapter[slot]),
+                "token": int(self.slot_tokens[slot]),
+                "len": int(self.slot_len[slot]),
+                "index": int(self._host_len)}
+
+    def import_slot(self, req: Request, state: Dict) -> None:
+        """Re-admit a migrated request from :meth:`export_slot` state.
+
+        Splices the shipped KV slice into a free slot and resumes decode
+        from the checkpointed token — token-exact with the source
+        (invariant M1).  The cache's scalar index is shared across slots,
+        so exactness requires the target's filled depth not to exceed the
+        source's (e.g. a fresh replica); deeper targets decode correctly
+        but attend padding for the shallower slot, like any mixed-depth
+        batch under the scalar-index cache model."""
+        slot = self.slot_req.index(None)
+
+        def splice(dst, src):
+            if dst.ndim == 0:
+                return dst
+            bdim = _batch_dim(dst)
+            idx = [slice(None)] * dst.ndim
+            idx[bdim] = slice(slot, slot + 1)
+            return dst.at[tuple(idx)].set(src)
+
+        self.cache = jax.tree.map(splice, self.cache, state["kv"])
+        self.cache["index"] = jnp.maximum(
+            self.cache["index"], jnp.asarray(state["index"], jnp.int32))
+        self._host_len = max(self._host_len, int(state["index"]))
+        self.slot_req[slot] = req.rid
+        self.slot_adapter[slot] = state["adapter"]
+        self.slot_tokens[slot] = state["token"]
+        self.slot_len[slot] = state["len"]
+
     # cost hooks (engine uses wall-clock when run_real is used instead)
     def decode_step_time(self, batch) -> float:
         t0 = time.perf_counter()

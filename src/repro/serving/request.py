@@ -64,6 +64,25 @@ class Request:
     kv_compression: Optional[str] = None
     kv_decompress_cost: float = 0.0
     decompress_done_time: Optional[float] = None
+    # scheduler-visible tenant priority: higher admits first, and with a
+    # MigrationPolicy attached a ready high-priority request may
+    # preempt-and-migrate a lower-priority running one (serving/migration.py)
+    priority: int = 0
+    # live migration / preemption (Fleet.migrate, ServingEngine.preempt).
+    # Wire accounting is CUMULATIVE across hops and kept separate from the
+    # prefill-handoff fields above, so the original handoff's bytes are
+    # never overwritten and no byte is charged twice (invariant M2).
+    migrations: int = 0              # completed live moves between replicas
+    preemptions: int = 0             # times evicted from a decode slot
+    migrated_from: Optional[int] = None  # source replica of the last move
+    migration_time: float = 0.0      # total checkpoint -> KV-landed span
+    mig_raw_bytes: int = 0           # KV bytes checkpointed across moves
+    mig_wire_bytes: int = 0          # bytes actually shipped (post-quant)
+    # pending target-side restore charge (wire dequant for a migrated
+    # checkpoint, host swap round-trip for a local preemption); the
+    # admitting engine pays it once and zeroes it (M1: the request then
+    # resumes decode at the same `generated` position it was stopped at)
+    kv_restore_cost: float = 0.0
 
     @property
     def wire_mode(self) -> str:
@@ -148,6 +167,11 @@ class ServeStats:
     n_page_reclaims: int = 0         # KV-pressure adapter-eviction rounds
     pages_reclaimed: int = 0         # adapter pages evicted to fund KV
     n_page_blocked: int = 0          # admissions deferred for lack of pages
+    # live migration / preemption (all zero when no request ever moves)
+    n_migrated_in: int = 0           # checkpoints re-admitted here
+    n_migrated_out: int = 0          # requests checkpointed away
+    n_preempted: int = 0             # decode-slot evictions (pages/priority)
+    restore_time: float = 0.0        # checkpoint restore paid at admission
 
     def record_finish(self, req: Request) -> None:
         self.n_requests += 1
@@ -210,6 +234,10 @@ class ServeStats:
             out.n_page_reclaims += s.n_page_reclaims
             out.pages_reclaimed += s.pages_reclaimed
             out.n_page_blocked += s.n_page_blocked
+            out.n_migrated_in += s.n_migrated_in
+            out.n_migrated_out += s.n_migrated_out
+            out.n_preempted += s.n_preempted
+            out.restore_time += s.restore_time
         return out
 
     def to_dict(self):
@@ -238,4 +266,8 @@ class ServeStats:
             "n_page_reclaims": self.n_page_reclaims,
             "pages_reclaimed": self.pages_reclaimed,
             "n_page_blocked": self.n_page_blocked,
+            "n_migrated_in": self.n_migrated_in,
+            "n_migrated_out": self.n_migrated_out,
+            "n_preempted": self.n_preempted,
+            "restore_time_s": self.restore_time,
         }

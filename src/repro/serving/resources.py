@@ -953,3 +953,38 @@ class KVFabric:
                 self.stats._bump_mode(tr.mode, tr.nbytes, tr.raw_bytes)
                 active.remove(tr)
         self.free_at = t
+
+
+@dataclasses.dataclass
+class MigrationTicket:
+    """Fabric proxy for a decode→decode KV move (live request migration).
+
+    :meth:`KVFabric.request` stamps whatever object it is given with the
+    transfer's wire accounting and landing times.  A *migration* must not
+    clobber the request's original prefill-handoff fields — those already
+    hold the first hop's bytes and the paid (or pending) decompression
+    charge — so ``Fleet.migrate`` ships a ticket instead and folds the
+    stamped values into the request's cumulative ``mig_*`` counters
+    afterwards.  Every wire byte is therefore charged exactly once, on
+    the hop that moved it (invariant M2, ``tests/test_migration.py``).
+
+    ``prompt_len`` is the number of KV *tokens* checkpointed (the prompt
+    plus every token generated so far), not the request's original prompt
+    length: ``kv_bytes_per_token`` must recover the per-token stride from
+    ``nbytes / prompt_len`` for block-granular wire sizing, and a
+    mid-stream checkpoint carries the whole decoded prefix."""
+
+    rid: int
+    prompt_len: int                  # KV tokens on the move (prompt + generated)
+    # stamped by KVFabric.request / KVFabric.resolve
+    kv_raw_bytes: int = 0
+    kv_wire_bytes: int = 0
+    kv_compression: Optional[str] = None
+    kv_decompress_cost: float = 0.0
+    decode_ready_time: Optional[float] = None
+    kv_landed_time: Optional[float] = None
+    transfer_time: float = 0.0
+
+    @property
+    def wire_mode(self) -> str:
+        return self.kv_compression or "raw"

@@ -54,6 +54,8 @@ from typing import Callable, Dict, List, Optional, Sequence
 from .engine import CostModelExecutor, ServingEngine
 from .prefill import PrefillTier
 from .request import Request, ServeStats, weight_key
+from .resources import (FabricConfig, KVFabric, MigrationTicket,
+                        kv_bytes_per_token, merge_mode_dict)
 
 POLICIES = ("round_robin", "least_outstanding", "adapter_affinity",
             "cluster_affinity")
@@ -75,6 +77,57 @@ class FleetConfig:
     # later, so hint that replica's AdapterCache.prefetch at prefill
     # admission time (low priority: never evicts, never delays demand)
     cross_tier_prefetch: bool = False
+    # live migration (PR 9): the decode→decode interconnect checkpointed
+    # KV ships over in a COLOCATED fleet.  Disaggregated fleets ignore
+    # this and reuse the prefill tier's contended fabric — migration
+    # traffic competes with prefill handoffs for the same wire.  None
+    # builds a default FabricConfig lazily on first migration.
+    migration_fabric: Optional[FabricConfig] = None
+
+
+@dataclasses.dataclass
+class MigrationStats:
+    """Fleet-level live-migration accounting (every :meth:`Fleet.migrate`),
+    including the per-mode wire split so compressed checkpoint traffic is
+    auditable against the handoff traffic sharing the same fabric."""
+
+    n_migrations: int = 0            # completed live moves
+    n_retire_migrations: int = 0     # moved by instant scale-down
+    n_preempt_migrations: int = 0    # moved to make room (pages/priority)
+    n_defrag_migrations: int = 0     # moved home by affinity defrag
+    migration_time: float = 0.0      # sum of checkpoint -> KV-landed spans
+    compress_time: float = 0.0       # wire quantize cost before shipping
+    kv_raw_bytes: int = 0            # checkpointed KV across all moves
+    kv_wire_bytes: int = 0           # bytes actually shipped
+    n_by_mode: Dict[str, int] = dataclasses.field(default_factory=dict)
+    wire_bytes_by_mode: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    raw_bytes_by_mode: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def empty(self) -> bool:
+        return self.n_migrations == 0
+
+    def _bump(self, mode: str, wire: int, raw: int) -> None:
+        merge_mode_dict(self.n_by_mode, {mode: 1})
+        merge_mode_dict(self.wire_bytes_by_mode, {mode: wire})
+        merge_mode_dict(self.raw_bytes_by_mode, {mode: raw})
+
+    def to_dict(self) -> Dict:
+        return {
+            "n_migrations": self.n_migrations,
+            "n_retire_migrations": self.n_retire_migrations,
+            "n_preempt_migrations": self.n_preempt_migrations,
+            "n_defrag_migrations": self.n_defrag_migrations,
+            "migration_time_s": self.migration_time,
+            "compress_time_s": self.compress_time,
+            "kv_raw_bytes": self.kv_raw_bytes,
+            "kv_wire_bytes": self.kv_wire_bytes,
+            "n_by_mode": dict(self.n_by_mode),
+            "wire_bytes_by_mode": dict(self.wire_bytes_by_mode),
+            "raw_bytes_by_mode": dict(self.raw_bytes_by_mode),
+        }
 
 
 @dataclasses.dataclass
@@ -88,6 +141,7 @@ class FleetStats:
     n_prefill_final: Optional[int] = None    # active prefill workers (joint)
     budget: Optional[Dict] = None        # HardwareBudget.to_dict() (joint)
     lifecycle: Optional[Dict] = None     # LifecycleStats.to_dict() (churn)
+    migration: Optional[Dict] = None     # MigrationStats.to_dict() (PR 9)
 
     def to_dict(self) -> Dict:
         d = self.total.to_dict()
@@ -105,6 +159,8 @@ class FleetStats:
             d["budget"] = self.budget
         if self.lifecycle is not None:
             d["lifecycle"] = self.lifecycle
+        if self.migration is not None:
+            d["migration"] = self.migration
         return d
 
 
@@ -150,6 +206,8 @@ class Fleet:
         self._routed_load: List[float] = [0.0] * len(engines)  # est. seconds
         self.assignments: Dict[int, int] = {}    # rid -> replica
         self.scale_events = 0
+        self.migration = MigrationStats()
+        self._mig_fabric: Optional[KVFabric] = None  # colocated, lazy
 
     # -- elastic membership -------------------------------------------------
     def _active_idxs(self) -> List[int]:
@@ -168,8 +226,18 @@ class Fleet:
         self.scale_events += 1
         return len(self.engines) - 1
 
-    def retire_replica(self, i: int) -> None:
-        """Stop routing to replica `i`; it drains its remaining queue."""
+    def retire_replica(self, i: int, migrate: bool = False,
+                       now: float = 0.0) -> None:
+        """Stop routing to replica `i`.
+
+        Drain-based (the default, bit-exact with the pre-migration
+        fleet): the replica accepts no new work but runs its queue to
+        completion, so its hardware is genuinely free only when the last
+        request finishes.  Instant scale-down (``migrate=True``): every
+        request still on the replica — running mid-decode or queued — is
+        live-migrated to the least-loaded surviving replica at `now`, so
+        the replica is EMPTY at retire time and its budget slice can be
+        re-allocated immediately instead of after the drain tail."""
         if not self.active[i]:
             return
         if len(self._active_idxs()) == 1:
@@ -177,6 +245,11 @@ class Fleet:
         self.active[i] = False
         self.scale_events += 1
         self.rehome(i)
+        if migrate:
+            eng = self.engines[i]
+            for req in list(eng.running) + list(eng.waiting):
+                self.migrate(req, self._least_outstanding(), now)
+                self.migration.n_retire_migrations += 1
 
     def rehome(self, replica: Optional[int] = None) -> None:
         """Drop sticky affinity placements so affected adapters/JD-clusters
@@ -199,6 +272,108 @@ class Fleet:
         retirement drain uses this so a retired adapter stops pinning
         placement state (invariant L5)."""
         self._home.pop(key, None)
+
+    # -- live migration (PR 9) ----------------------------------------------
+    def migration_fabric(self) -> KVFabric:
+        """The channel checkpointed KV ships over: the prefill tier's
+        contended fabric when disaggregated (migrations compete with
+        prefill handoffs for the same wire), else a lazily built
+        decode→decode fabric from ``FleetConfig.migration_fabric``."""
+        if self.prefill_tier is not None:
+            return self.prefill_tier.fabric
+        if self._mig_fabric is None:
+            self._mig_fabric = KVFabric(self.cfg.migration_fabric
+                                        or FabricConfig())
+        return self._mig_fabric
+
+    def migrate(self, req: Request, target: int, now: float) -> float:
+        """Live-migrate `req` to replica `target` at simulated time `now`.
+
+        The source engine checkpoints the request — decode slot vacated,
+        KV pages freed immediately (invariant M3) — and the full decoded
+        prefix (prompt + every generated token) ships over
+        :meth:`migration_fabric` as ONE transfer, wire-quantized by the
+        fabric's compression plan exactly like a prefill handoff.  The
+        transfer is recorded against a :class:`MigrationTicket
+        <repro.serving.resources.MigrationTicket>` rather than the
+        request, so the original handoff accounting survives and every
+        wire byte is charged exactly once (M2); the stamped values fold
+        into the request's cumulative ``mig_*`` counters.  The target
+        pays the checkpoint's dequant at re-admission
+        (`Request.kv_restore_cost`) and resumes decode at the same
+        `generated` position (M1).  The quantize cost is charged to the
+        transfer's start, not the source's decode clock — the source is
+        shedding this request, its remaining batch must not stall.  The
+        target's adapter cache is hinted through
+        :meth:`AdapterCache.prefetch
+        <repro.serving.adapter_cache.AdapterCache.prefetch>`, which
+        dedupes against residency and in-flight hints, so a stale hint
+        for the source (or a repeat migration) never double-loads (M4).
+        Returns the time decode may resume on the target (the first wire
+        chunk's landing; `now` for zero-KV moves)."""
+        source = self.assignments.get(req.rid, req.replica)
+        if source is None:
+            raise ValueError(f"request {req.rid} was never routed")
+        if source == target:
+            raise ValueError(f"request {req.rid} is already on {target}")
+        if not self.active[target]:
+            raise ValueError(f"cannot migrate to retired replica {target}")
+        src_eng, dst_eng = self.engines[source], self.engines[target]
+        nbytes = src_eng.checkpoint(req)
+        src_eng.stats.n_migrated_out += 1
+        dst_eng.cache.prefetch(
+            weight_key(req), dst_eng.executor.adapter_bytes(req.adapter_id),
+            now)
+        if nbytes > 0:
+            fabric = self.migration_fabric()
+            tokens = req.prompt_len + req.generated
+            ticket = MigrationTicket(rid=req.rid, prompt_len=tokens)
+            comp = fabric.plan(ticket, now, nbytes)
+            ready = now
+            if comp is not None:
+                ready += comp.compress_time(
+                    nbytes, kv_bytes_per_token(nbytes, tokens))
+            fabric.request(ticket, ready, nbytes, comp=comp)
+            fabric.resolve()
+            req.mig_raw_bytes += ticket.kv_raw_bytes
+            req.mig_wire_bytes += ticket.kv_wire_bytes
+            req.kv_restore_cost += ticket.kv_decompress_cost
+            # not admissible on the target before its first chunk lands
+            req.decode_ready_time = ticket.decode_ready_time
+            resume, landed = ticket.decode_ready_time, ticket.kv_landed_time
+            self.migration.compress_time += ready - now
+            self.migration.kv_raw_bytes += ticket.kv_raw_bytes
+            self.migration.kv_wire_bytes += ticket.kv_wire_bytes
+            self.migration._bump(ticket.wire_mode, ticket.kv_wire_bytes,
+                                 ticket.kv_raw_bytes)
+        else:
+            resume = landed = now
+        req.replica = target
+        req.migrated_from = source
+        req.migrations += 1
+        req.migration_time += landed - now
+        self.assignments[req.rid] = target
+        if self.cfg.policy in ("adapter_affinity", "cluster_affinity"):
+            w = self._remaining_work(req)
+            self._routed_load[source] = max(0.0,
+                                            self._routed_load[source] - w)
+            self._routed_load[target] += w
+        dst_eng.stats.n_migrated_in += 1
+        dst_eng.submit([req])
+        self.migration.n_migrations += 1
+        self.migration.migration_time += landed - now
+        return resume
+
+    def _remaining_work(self, req: Request) -> float:
+        """`_work_estimate` restricted to the tokens `req` has left — the
+        share of routed load that moves replicas with a migration."""
+        ex = self.engines[0].executor
+        if isinstance(ex, CostModelExecutor):
+            bs = self.engines[0].cfg.scheduler.max_batch
+            step = ex.decode_step_time([req] * bs)
+            pre = 0.0 if req.prefilled else ex.prefill_time(req)
+            return pre + (req.max_new_tokens - req.generated) * step / bs
+        return float(req.max_new_tokens - req.generated)
 
     # -- live state helpers -------------------------------------------------
     def _advance_to(self, t: float) -> None:
@@ -316,12 +491,22 @@ class Fleet:
 
     def run(self, max_steps: int = 10_000_000) -> FleetStats:
         per = [eng.run(max_steps) for eng in self.engines]
+        # live migration can rehome work onto a replica drained earlier in
+        # the pass — sweep again until a full pass leaves every queue
+        # empty.  Bounded: each request's moves are capped (the M5
+        # starvation guard declines over-cap rehomes, falling back to a
+        # local host swap), so migration-free fleets exit after one pass,
+        # bit-exact with the sequential drain.
+        while any(eng.running or eng.waiting for eng in self.engines):
+            per = [eng.run(max_steps) for eng in self.engines]
         return FleetStats(
             total=ServeStats.merged(per), per_replica=per,
             prefill=(self.prefill_tier.stats.to_dict()
                      if self.prefill_tier is not None else None),
             n_replicas_final=len(self._active_idxs()),
-            scale_events=self.scale_events)
+            scale_events=self.scale_events,
+            migration=(None if self.migration.empty
+                       else self.migration.to_dict()))
 
     def replicas_of_adapter(self, requests: Sequence[Request]) -> Dict[int, set]:
         """adapter_id -> set of replicas its requests were routed to."""

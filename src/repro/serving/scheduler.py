@@ -3,10 +3,13 @@ admission (§6.4 + the paper's "clustering offers opportunities for efficient
 scheduling" direction in §7).
 
 Policy:
-  1. running requests always keep their decode slot (no preemption);
-  2. free slots admit waiting requests, preferring (a) adapters already
-     resident, (b) adapters whose *cluster* basis is resident (compressed
-     mode), (c) FIFO otherwise;
+  1. running requests keep their decode slot unless explicitly preempted
+     (:meth:`Scheduler.pick_victim` — mid-decode page exhaustion or a
+     higher-priority tenant via the live-migration machinery,
+     serving/migration.py; the default priority-0 stream never preempts);
+  2. free slots admit waiting requests, highest `Request.priority` first,
+     then preferring (a) adapters already resident, (b) adapters whose
+     *cluster* basis is resident (compressed mode), (c) FIFO otherwise;
   3. per-batch distinct-adapter cap models the SGMV tile-efficiency limit.
 """
 from __future__ import annotations
@@ -45,10 +48,12 @@ class Scheduler:
             same_cluster = (self.cfg.cluster_aware and
                             self.cluster_of.get(req.adapter_id)
                             in active_clusters)
-            # lower = better; FIFO tiebreak by decode-readiness (equals the
-            # arrival time for colocated serving)
-            return (not same_adapter, not resident_hit, not same_cluster,
-                    req.ready_time)
+            # lower = better; priority dominates (all-zero priorities —
+            # every pre-migration workload — leave the order unchanged),
+            # then FIFO tiebreak by decode-readiness (equals the arrival
+            # time for colocated serving)
+            return (-req.priority, not same_adapter, not resident_hit,
+                    not same_cluster, req.ready_time)
 
         ready = [r for r in waiting if r.ready_time <= now]
         ready.sort(key=score)
@@ -63,6 +68,30 @@ class Scheduler:
             adapters.add(r.adapter_id)
             admitted.append(r)
         return admitted
+
+    @staticmethod
+    def pick_victim(running: Sequence[Request],
+                    below_priority: Optional[int] = None,
+                    protect: Sequence[int] = (),
+                    max_moves: Optional[int] = None) -> Optional[Request]:
+        """Choose which running request to preempt, or None if nobody may
+        be.  Eligibility: rid not in `protect`, priority strictly below
+        `below_priority` (None = any), and fewer than `max_moves` prior
+        evictions — the cap is the starvation guard (invariant M5): a
+        request bounced `max_moves` times keeps its slot for good, so
+        every victim eventually runs to completion.  Among the eligible,
+        the victim is the lowest-priority request, ties broken by the
+        smallest KV footprint (cheapest checkpoint to ship), then rid."""
+        safe = set(protect)
+        cands = [r for r in running
+                 if r.rid not in safe
+                 and (below_priority is None or r.priority < below_priority)
+                 and (max_moves is None
+                      or r.migrations + r.preemptions < max_moves)]
+        if not cands:
+            return None
+        return min(cands, key=lambda r: (r.priority,
+                                         r.prompt_len + r.generated, r.rid))
 
     @staticmethod
     def group_by_adapter(batch: Sequence[Request]) -> Dict[int, List[Request]]:

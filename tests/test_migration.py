@@ -1,0 +1,542 @@
+"""Mid-stream live migration (PR 9): checkpoint/restore, wire accounting,
+preemption policies, and the unified study driver.
+
+The migration invariants asserted here (M1-M5) are the ones documented in
+docs/architecture.md — keep the two in sync:
+
+  M1 — token-exact resume (cost model AND real executor);
+  M2 — no double-charged wire bytes (handoff and migration accounted
+       separately, each exactly once);
+  M3 — KV pages freed on the source at checkpoint time;
+  M4 — prefetch hints deduped on the target;
+  M5 — preemption never starves the victim (move cap + all finish).
+"""
+import dataclasses as dc
+
+import numpy as np
+import pytest
+
+from repro.serving.adapter_cache import AdapterCache, CacheConfig, DMAModel
+from repro.serving.engine import (CostModelExecutor, EngineConfig,
+                                  ModelFootprint, ServingEngine,
+                                  ServingHardware)
+from repro.serving.lifecycle import LifecycleEvent
+from repro.serving.migration import MigrationConfig, MigrationPolicy
+from repro.serving.request import Request
+from repro.serving.resources import PAGE_TOKENS, FabricConfig
+from repro.serving.router import Fleet, FleetConfig
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.serving.simulator import StudyEvent, run_study
+
+
+def make_fp(kv_bytes_per_token=1024):
+    page = kv_bytes_per_token * PAGE_TOKENS
+    return ModelFootprint(
+        n_active_params=int(1e8), weight_bytes=int(1e9),
+        lora_bytes_per_adapter=2 * page,
+        jd_shared_bytes_per_cluster=page, jd_sigma_bytes_per_adapter=64,
+        kv_bytes_per_token=kv_bytes_per_token)
+
+
+def _engine(fp=None, max_batch=8, total_pages=None, kv_reserve="worst_case",
+            max_preemptions=3):
+    fp = fp or make_fp()
+    ex = CostModelExecutor(ServingHardware(), fp, "lora")
+    pool = None
+    if total_pages is not None:
+        page_bytes = fp.kv_bytes_per_token * PAGE_TOKENS
+        pool = fp.pool_config(float(total_pages * page_bytes))
+    eng = ServingEngine(
+        EngineConfig(scheduler=SchedulerConfig(max_batch=max_batch),
+                     adapter_budget_bytes=1e9, pool=pool,
+                     kv_reserve=kv_reserve, max_preemptions=max_preemptions),
+        ex)
+    return eng
+
+
+def _fleet(n=2, policy="round_robin", fabric=None, **eng_kw):
+    cfg = FleetConfig(n_replicas=n, policy=policy, migration_fabric=fabric)
+    return Fleet(cfg, [_engine(**eng_kw) for _ in range(n)])
+
+
+def _req(rid=0, adapter=0, prompt=PAGE_TOKENS, new_tokens=8, t=0.0,
+         priority=0):
+    return Request(rid=rid, adapter_id=adapter, prompt_len=prompt,
+                   max_new_tokens=new_tokens, arrival_time=t,
+                   priority=priority)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: priority admission and victim selection
+# ---------------------------------------------------------------------------
+
+
+def test_priority_admission_first():
+    sched = Scheduler(SchedulerConfig(max_batch=1))
+    lo = _req(rid=0, t=0.0, priority=0)
+    hi = _req(rid=1, t=0.0, priority=5)
+    admitted = sched.admit([], [lo, hi], set(), now=0.0)
+    assert admitted == [hi]
+
+
+def test_pick_victim_lowest_priority_smallest_kv():
+    a = _req(rid=0, priority=0, prompt=256)
+    b = _req(rid=1, priority=0, prompt=128)
+    c = _req(rid=2, priority=3, prompt=64)
+    assert Scheduler.pick_victim([a, b, c]) is b      # low prio, small KV
+    assert Scheduler.pick_victim([a, b, c], protect=(1,)) is a
+    assert Scheduler.pick_victim([a, b, c], below_priority=1) is b
+    assert Scheduler.pick_victim([c], below_priority=3) is None
+
+
+def test_pick_victim_move_cap():                                   # M5
+    """A request at the move cap is no longer an eligible victim."""
+    bounced = _req(rid=0, priority=0)
+    bounced.migrations, bounced.preemptions = 2, 1
+    fresh = _req(rid=1, priority=0, prompt=4 * PAGE_TOKENS)
+    assert Scheduler.pick_victim([bounced, fresh], max_moves=3) is fresh
+    assert Scheduler.pick_victim([bounced], max_moves=3) is None
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / restore
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_frees_source_pages_immediately():              # M3
+    """Pages are back in the source pool at checkpoint time, before the
+    checkpoint lands anywhere."""
+    eng = _engine(total_pages=64)
+    req = _req(new_tokens=4)
+    eng.submit([req])
+    eng.step()
+    assert req in eng.running and eng.pool.used["kv"] > 0
+    held = eng._kv_held[req.rid]
+    free_before = eng.pool.free_pages
+    nbytes = eng.checkpoint(req)
+    assert req not in eng.running
+    assert req.rid not in eng._kv_held
+    assert eng.pool.free_pages == free_before + held
+    assert eng.pool.free_pages + sum(eng.pool.used.values()) \
+        == eng.pool.total_pages
+    # the full decoded prefix must move: prompt plus generated tokens
+    fp = eng.executor.fp
+    assert nbytes == (req.prompt_len + req.generated) * fp.kv_bytes_per_token
+
+
+def test_checkpoint_unrouted_request_raises():
+    eng = _engine()
+    with pytest.raises(ValueError):
+        eng.checkpoint(_req())
+
+
+def test_zero_kv_checkpoint_for_unprefilled_waiting():
+    eng = _engine(max_batch=1)
+    first, queued = _req(rid=0), _req(rid=1)
+    eng.submit([first, queued])
+    eng.step()
+    assert queued in eng.waiting
+    assert eng.checkpoint(queued) == 0
+
+
+# ---------------------------------------------------------------------------
+# fleet.migrate: token-exact resume + wire accounting
+# ---------------------------------------------------------------------------
+
+
+def _run_until_generated(fleet, req, g):
+    eng = fleet.engines[fleet.assignments[req.rid]]
+    while req.generated < g:
+        assert eng.step()
+    return eng
+
+
+def test_migrate_token_exact_resume():                             # M1
+    """A migrated request resumes at the same `generated` position and
+    finishes with exactly the same number of output tokens as an
+    unmigrated control run."""
+    control = _fleet(n=2)
+    creq = _req(new_tokens=8)
+    control.submit([creq])
+    control.run()
+
+    fleet = _fleet(n=2)
+    req = _req(new_tokens=8)
+    fleet.submit([req])
+    eng = _run_until_generated(fleet, req, 3)
+    g0 = req.generated
+    resume = fleet.migrate(req, 1, now=eng.clock)
+    assert req.generated == g0                  # never reset by the move
+    assert req.replica == 1 and req.migrated_from == 0
+    assert req.migrations == 1
+    assert resume >= eng.clock                  # wire time is not free
+    fleet.run()
+    assert req.generated == req.max_new_tokens == creq.generated
+    assert fleet.engines[1].stats.n_requests == 1
+    assert fleet.engines[0].stats.n_migrated_out == 1
+    assert fleet.engines[1].stats.n_migrated_in == 1
+
+
+def test_migrate_wire_bytes_charged_once():                        # M2
+    """Migration wire traffic is accounted on the migration ticket and
+    the request's cumulative `mig_*` counters — the prefill-handoff
+    fields stay untouched, and fabric totals equal the sum of the two
+    accounting streams (each byte charged exactly once)."""
+    fleet = _fleet(n=2, fabric=FabricConfig())
+    req = _req(new_tokens=8)
+    fleet.submit([req])
+    eng = _run_until_generated(fleet, req, 3)
+    fleet.migrate(req, 1, now=eng.clock)
+    fp = fleet.engines[0].executor.fp
+    expect = (req.prompt_len + req.generated) * fp.kv_bytes_per_token
+    assert req.mig_raw_bytes == expect
+    assert req.mig_wire_bytes > 0
+    # handoff fields unclobbered: this was a colocated request, so the
+    # prefill-handoff stream carried nothing
+    assert req.kv_raw_bytes == 0 and req.kv_wire_bytes == 0
+    m = fleet.migration
+    assert m.n_migrations == 1
+    assert m.kv_raw_bytes == req.mig_raw_bytes
+    assert m.kv_wire_bytes == req.mig_wire_bytes
+    fab = fleet.migration_fabric()
+    assert sum(fab.stats.wire_bytes_by_mode.values()) == m.kv_wire_bytes
+    fleet.run()
+    # a second migration accumulates rather than overwrites
+    raw1 = req.mig_raw_bytes
+    req2 = _req(rid=1, new_tokens=8)
+    fleet.submit([req2])
+    assert req.mig_raw_bytes == raw1
+
+
+def test_migrate_rejects_bad_targets():
+    fleet = _fleet(n=3)
+    req = _req(new_tokens=4)
+    fleet.submit([req])
+    src = fleet.assignments[req.rid]
+    with pytest.raises(ValueError):
+        fleet.migrate(req, src, now=0.0)
+    fleet.retire_replica(2)
+    if src != 2:
+        with pytest.raises(ValueError):
+            fleet.migrate(req, 2, now=0.0)
+    with pytest.raises(ValueError):
+        fleet.migrate(_req(rid=99), 1 - src, now=0.0)
+
+
+def test_migration_prefetch_dedupe():                              # M4
+    """The target's adapter-cache hint never double-loads: resident or
+    in-flight adapters absorb the hint."""
+    fleet = _fleet(n=2)
+    r0, r1 = _req(rid=0, adapter=7, new_tokens=8), \
+        _req(rid=1, adapter=7, new_tokens=8, t=1e-4)
+    fleet.submit([r0, r1])      # round robin: r0 -> replica 0, r1 -> 1
+    eng0 = _run_until_generated(fleet, r0, 2)
+    dst = fleet.engines[1]
+    # adapter 7 already resident on the target (r1 decoded there):
+    # the migration hint must be a no-op
+    _run_until_generated(fleet, r1, 1)
+    assert dst.cache.is_resident(7)
+    n0 = dst.cache.n_prefetches
+    fleet.migrate(r0, 1, now=max(eng0.clock, dst.clock))
+    assert dst.cache.n_prefetches == n0
+    fleet.run()
+
+
+def test_migration_prefetch_issued_when_cold():                    # M4
+    fleet = _fleet(n=2)
+    r0 = _req(rid=0, adapter=7, new_tokens=8)
+    fleet.submit([r0])
+    eng0 = _run_until_generated(fleet, r0, 2)
+    dst = fleet.engines[1]
+    assert not dst.cache.is_resident(7)
+    fleet.migrate(r0, 1, now=eng0.clock)
+    assert dst.cache.n_prefetches == 1
+    fleet.run()
+    assert r0.generated == r0.max_new_tokens
+
+
+# ---------------------------------------------------------------------------
+# instant scale-down
+# ---------------------------------------------------------------------------
+
+
+def test_retire_migrate_empties_source_immediately():
+    """Instant scale-down: the retired replica holds nothing the moment
+    retire returns — its budget slice is free now, not after a drain."""
+    fleet = _fleet(n=2)
+    reqs = [_req(rid=i, new_tokens=8) for i in range(4)]
+    fleet.submit(reqs)
+    src = fleet.engines[0]
+    while not src.running:
+        src.step()
+    t = max(e.clock for e in fleet.engines)
+    n_on_src = len(src.running) + len(src.waiting)
+    assert n_on_src > 0
+    fleet.retire_replica(0, migrate=True, now=t)
+    assert not src.running and not src.waiting
+    assert fleet.migration.n_retire_migrations == n_on_src
+    fleet.run()
+    assert all(r.generated == r.max_new_tokens for r in reqs)
+
+
+def test_retire_drain_keeps_source_busy():
+    """Control for the above: drain-based retirement leaves the queue on
+    the retired replica (the legacy, bit-exact default)."""
+    fleet = _fleet(n=2)
+    reqs = [_req(rid=i, new_tokens=8) for i in range(4)]
+    fleet.submit(reqs)
+    src = fleet.engines[0]
+    while not src.running:
+        src.step()
+    held = len(src.running) + len(src.waiting)
+    fleet.retire_replica(0)
+    assert len(src.running) + len(src.waiting) == held
+    assert fleet.migration.empty
+    fleet.run()
+
+
+# ---------------------------------------------------------------------------
+# on-demand KV growth + preemption
+# ---------------------------------------------------------------------------
+
+
+def test_on_demand_reserves_fewer_pages_at_admission():
+    """The mid-decode-growth bugfix: admission reserves pages for the
+    prompt plus ONE token instead of the worst-case max_new_tokens."""
+    worst = _engine(total_pages=64)
+    grow = _engine(total_pages=64, kv_reserve="on_demand")
+    for eng in (worst, grow):
+        eng.submit([_req(new_tokens=4 * PAGE_TOKENS)])
+        eng.step()
+    assert grow._kv_held[0] < worst._kv_held[0]
+    fp = grow.executor.fp
+    bpt = fp.kv_bytes_per_token
+    assert worst._kv_held[0] == worst.pool.pages_for(
+        (PAGE_TOKENS + 4 * PAGE_TOKENS) * bpt)
+    # prompt + generated + 1 grows with the decode
+    g = grow.pool.pages_for((PAGE_TOKENS + 1) * bpt)
+    assert grow._kv_held[0] >= g
+
+
+def test_on_demand_growth_completes_all_requests():                # M5
+    """Page pressure forces preemption (host-swap fallback on a lone
+    replica), but every victim is re-queued and finishes — preemption
+    delays requests, never starves them."""
+    eng = _engine(total_pages=8, kv_reserve="on_demand", max_batch=4)
+    reqs = [_req(rid=i, adapter=i, new_tokens=2 * PAGE_TOKENS)
+            for i in range(4)]
+    eng.submit(reqs)
+    stats = eng.run()
+    assert stats.n_requests == len(reqs)
+    assert all(r.generated == r.max_new_tokens for r in reqs)
+    assert stats.n_preempted > 0
+    assert stats.restore_time > 0        # the swap round trip was paid
+    assert eng.pool.used["kv"] == 0      # everything released at the end
+
+
+def test_on_demand_infeasible_single_request_raises():
+    """A single request that outgrows the whole pool has no victim to
+    preempt: growth must fail loudly, not loop."""
+    eng = _engine(total_pages=2, kv_reserve="on_demand")
+    eng.submit([_req(new_tokens=4 * PAGE_TOKENS)])
+    with pytest.raises(MemoryError):
+        eng.run()
+
+
+def test_on_demand_requires_pool():
+    fp = make_fp()
+    ex = CostModelExecutor(ServingHardware(), fp, "lora")
+    with pytest.raises(ValueError):
+        ServingEngine(EngineConfig(kv_reserve="on_demand"), ex)
+    with pytest.raises(ValueError):
+        ServingEngine(EngineConfig(kv_reserve="bogus"), ex)
+
+
+def test_preempt_migrates_across_fleet_when_wired():               # M5
+    """With a MigrationPolicy attached, page-pressure preemption rehomes
+    the victim on another replica instead of host-swapping, and the
+    move cap keeps any one request from bouncing forever."""
+    fleet = _fleet(n=2, total_pages=8, kv_reserve="on_demand", max_batch=4)
+    policy = MigrationPolicy(MigrationConfig(max_moves_per_request=2))
+    policy.attach(fleet)
+    reqs = [_req(rid=i, adapter=i, new_tokens=2 * PAGE_TOKENS,
+                 t=i * 1e-4) for i in range(6)]
+    fleet.submit(reqs)
+    stats = fleet.run()
+    assert stats.total.n_requests == len(reqs)
+    assert all(r.generated == r.max_new_tokens for r in reqs)
+    cap = policy.cfg.max_moves_per_request
+    assert all(r.migrations + r.preemptions <= cap + 1 for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# priority preemption policy
+# ---------------------------------------------------------------------------
+
+
+def test_priority_tenant_preempts_and_victim_finishes():           # M5
+    """A full batch with a waiting priority tenant evicts the cheapest
+    low-priority victim to another replica; the tenant gets the slot,
+    the victim still completes."""
+    fleet = _fleet(n=2, max_batch=2)
+    policy = MigrationPolicy()
+    policy.attach(fleet)
+    base = [_req(rid=i, adapter=i, new_tokens=64) for i in range(2)]
+    # both low-priority requests onto replica 0, decoded into the batch
+    # BEFORE the priority tenant shows up
+    eng = fleet.engines[0]
+    eng.submit(base)
+    for r in base:
+        fleet.assignments[r.rid] = 0
+        r.replica = 0
+    while len(eng.running) < 2:
+        eng.step()
+    vip = _req(rid=10, adapter=9, new_tokens=4, t=eng.clock, priority=5)
+    eng.submit([vip])
+    fleet.assignments[vip.rid] = 0
+    vip.replica = 0
+    assert vip in eng.waiting            # batch full with low-priority work
+    policy.on_window(fleet, t=eng.clock)
+    assert fleet.migration.n_preempt_migrations == 1
+    fleet.run()
+    assert vip.generated == vip.max_new_tokens
+    assert all(r.generated == r.max_new_tokens for r in base)
+    moved = [r for r in base if r.migrations > 0]
+    assert len(moved) == 1
+
+
+# ---------------------------------------------------------------------------
+# the unified study driver
+# ---------------------------------------------------------------------------
+
+
+def test_run_study_one_shot_matches_fleet_run():
+    """No control plane, no window: run_study is the legacy
+    submit-and-drain path, bit-exact."""
+    reqs_a = [_req(rid=i, adapter=i % 3, new_tokens=4, t=i * 1e-3)
+              for i in range(8)]
+    reqs_b = [dc.replace(r) for r in reqs_a]
+    fa, fb = _fleet(n=2), _fleet(n=2)
+    fa.submit(reqs_a)
+    legacy = fa.run().to_dict()
+    report = run_study(fb, reqs_b)
+    assert report.stats.to_dict() == legacy
+    assert report.migration is None and report.decisions is None
+
+
+def test_run_study_event_retire_with_migration():
+    """A scripted retire event under a MigrationPolicy does instant
+    scale-down: the report carries the migration accounting."""
+    reqs = [_req(rid=i, adapter=i % 3, new_tokens=256, t=i * 1e-3)
+            for i in range(12)]
+    report = run_study(
+        _fleet(n=2), reqs,
+        migration=MigrationPolicy(),
+        events=[StudyEvent(t=2e-3, fn=lambda s: s.retire_decode(0),
+                           label="retire replica 0")],
+        window=2e-3)
+    assert report.stats.total.n_requests == len(reqs)
+    assert report.migration is not None
+    assert report.migration["n_retire_migrations"] > 0
+    assert report.migration["n_migrations"] \
+        >= report.migration["n_retire_migrations"]
+    assert "rps" in report.metrics()
+    assert "migrations=" in report.derived()
+
+
+def test_run_study_lifecycle_event_requires_lifecycle():
+    with pytest.raises(ValueError):
+        run_study(_fleet(n=2), [_req()],
+                  events=[LifecycleEvent(t=0.1, action="register",
+                                         adapter_id=5)],
+                  window=0.1)
+
+
+def test_study_report_wire_accounting():
+    """Per-mode wire accounting surfaces migration traffic."""
+    reqs = [_req(rid=i, adapter=i % 3, new_tokens=256, t=i * 1e-3)
+            for i in range(8)]
+    report = run_study(
+        _fleet(n=2, fabric=FabricConfig()), reqs,
+        migration=MigrationPolicy(),
+        events=[StudyEvent(t=2e-3, fn=lambda s: s.retire_decode(0))],
+        window=2e-3)
+    assert report.migration is not None
+    assert report.migration["kv_wire_bytes"] > 0
+    assert report.wire_by_mode is not None
+    assert sum(report.wire_by_mode.values()) \
+        >= report.migration["kv_wire_bytes"]
+    d = report.to_dict()
+    assert d["wire_bytes_by_mode"] == report.wire_by_mode
+
+
+# ---------------------------------------------------------------------------
+# real executor: checkpoint/restore is token-exact
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def real_setup():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import smoke_config
+    from repro.models import transformer as tf
+    from repro.models.param import init_params
+
+    cfg = dc.replace(smoke_config("mistral-7b"), num_layers=2, d_model=64,
+                     num_heads=2, num_kv_heads=1, d_ff=128, vocab_size=64)
+    params = init_params(tf.model_defs(cfg), jax.random.PRNGKey(0))
+    L, n, r = cfg.num_layers, 4, 8
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    dims = {"q": (d, cfg.num_heads * hd), "k": (d, cfg.num_kv_heads * hd),
+            "v": (d, cfg.num_kv_heads * hd), "o": (cfg.num_heads * hd, d)}
+    ks = jax.random.split(jax.random.PRNGKey(7), 2 * len(dims))
+    bundles = {"layers": {}}
+    for i, (tgt, (di, do)) in enumerate(dims.items()):
+        bundles["layers"][tgt] = {
+            "A": 0.05 * jax.random.normal(ks[2 * i], (L, n, r, di),
+                                          jnp.float32),
+            "B": 0.05 * jax.random.normal(ks[2 * i + 1], (L, n, do, r),
+                                          jnp.float32)}
+    return cfg, params, bundles, n
+
+
+def test_real_executor_migration_token_exact(real_setup):          # M1
+    """Export a mid-decode slot from one executor and import it into a
+    fresh one: the continued token stream equals the unmigrated control
+    stream exactly."""
+    from repro.serving.real_executor import RealModelExecutor
+
+    cfg, params, bundles, n = real_setup
+
+    def executor():
+        return RealModelExecutor(cfg, params, bundles, "lora", max_batch=4,
+                                 s_max=64, decode_path="unfused")
+
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, 36, size=7).astype(np.int32)
+    req = Request(rid=0, adapter_id=1, prompt_len=len(prompt),
+                  max_new_tokens=10)
+
+    control = executor()
+    control.prefill_request(req, prompt)
+    want = [int(control.slot_tokens[0])]
+    for _ in range(8):
+        want.append(control.decode_step_real()[0])
+
+    src = executor()
+    src.prefill_request(Request(rid=0, adapter_id=1,
+                                prompt_len=len(prompt), max_new_tokens=10),
+                        prompt)
+    got = [int(src.slot_tokens[0])]
+    for _ in range(4):
+        got.append(src.decode_step_real()[0])
+    state = src.export_slot(0)
+    src.release(0)
+
+    dst = executor()
+    dst.import_slot(Request(rid=0, adapter_id=1, prompt_len=len(prompt),
+                            max_new_tokens=10), state)
+    for _ in range(4):
+        got.append(dst.decode_step_real()[0])
+    assert got == want
