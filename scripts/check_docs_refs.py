@@ -47,11 +47,11 @@ RE_CLASS = re.compile(r"^[A-Z][A-Za-z0-9]*$")
 RE_CONST = re.compile(r"^[A-Z][A-Z0-9_]{2,}$")
 RE_DEF = re.compile(r"^(?:class|def)\s+(\w+)", re.M)
 RE_CLASS_DEF = re.compile(r"^class\s+(\w+)", re.M)
-# invariant IDs: loose in prose ("I1", "L4", "M2"), marker-form in tests
-# (trailing "# L4" comment or "Invariant L4" docstring opener) so test
-# code mentioning e.g. an L2 norm can't inject phantom invariants
-RE_DOC_INV = re.compile(r"\b([ILM]\d+)\b")
-RE_TEST_INV = re.compile(r"(?:#\s*|Invariant\s+)([ILM]\d+)\b")
+# invariant IDs: loose in prose ("I1", "L4", "M2", "H3"), marker-form in
+# tests (trailing "# L4" comment or "Invariant L4" docstring opener) so
+# test code mentioning e.g. an L2 norm can't inject phantom invariants
+RE_DOC_INV = re.compile(r"\b([HILM]\d+)\b")
+RE_TEST_INV = re.compile(r"(?:#\s*|Invariant\s+)([HILM]\d+)\b")
 RE_TEST_REF = re.compile(r"\btests/test_\w+\.py")
 
 BUILTINS = set(dir(builtins))

@@ -203,6 +203,9 @@ class JointScaleDecision:
     fabric_lag_s: float = 0.0        # fabric horizon past the window end
     kv_page_util: float = 0.0        # worst decode replica's page pressure
     refresh_active: bool = False     # basis-refresh rollout in flight
+    # typed pools only: which slice class a +1 delta should land on
+    prefill_slice: Optional[str] = None
+    decode_slice: Optional[str] = None
 
 
 class JointAutoscaler:
@@ -227,13 +230,13 @@ class JointAutoscaler:
                  comp_policy: Optional[AdaptiveCompressionPolicy] = None):
         need = (cfg.min_prefill * budget.cfg.cost("prefill")
                 + cfg.min_decode * budget.cfg.cost("decode"))
-        if need > budget.cfg.total_accelerators:
+        if need > budget.cfg.total_units:
             raise ValueError(
                 f"budget too small for the tier floors: min_prefill="
                 f"{cfg.min_prefill} x {budget.cfg.cost('prefill')} accels + "
                 f"min_decode={cfg.min_decode} x "
                 f"{budget.cfg.cost('decode')} accels needs {need}, pool has "
-                f"{budget.cfg.total_accelerators}")
+                f"{budget.cfg.total_units}")
         self.cfg = cfg
         self.slo = slo
         self.budget = budget
@@ -269,11 +272,53 @@ class JointAutoscaler:
     def _p95(xs: Sequence[float]) -> float:
         return float(np.percentile(xs, 95)) if len(xs) else 0.0
 
-    def _trade_frees_enough(self, donor: str, receiver: str) -> bool:
-        """Retiring one `donor` unit must free enough accelerators for one
-        `receiver` unit (footprints differ per role)."""
-        return (self.budget.available + self.budget.cfg.cost(donor)
-                >= self.budget.cfg.cost(receiver))
+    def pick_slice(self, role: str, extra_units: int = 0):
+        """Which slice class a +1 `role` delta should land on (None for an
+        untyped pool — the legacy accelerator).
+
+        Preference order encodes the tiers' rooflines: **prefill** wants
+        the fastest compute per worker (big slices first — prefill is
+        compute-bound and one fast worker beats two slow ones on p95 lag),
+        **decode** wants the best bandwidth *per cost unit* (small slices
+        first at equal efficiency — decode scales out and more replicas
+        mean more aggregate HBM streams and more pool pages).  The first
+        affordable type in preference order wins, where "affordable"
+        includes `extra_units` a same-decision trade is about to free;
+        with nothing affordable the cheapest type is returned so the
+        caller's exhaustion handling (escalate / trade) sees the floor
+        price."""
+        cfg = self.budget.cfg
+        if not cfg.typed:
+            return None
+        if role == "prefill":
+            def key(st):
+                return (-st.prefill_speed, st.cost(role), st.name)
+        else:
+            def key(st):
+                return (-(st.decode_speed / st.cost(role)),
+                        st.cost(role), st.name)
+        ranked = sorted(cfg.types(), key=key)
+        affordable = self.budget.available + extra_units
+        for st in ranked:
+            if st.cost(role) <= affordable:
+                return st
+        return min(ranked, key=lambda st: st.cost(role))
+
+    def _trade_frees_enough(self, donor: str, receiver: str,
+                            donor_units: Optional[int] = None) -> bool:
+        """Retiring one `donor` unit must free enough cost units for one
+        `receiver` unit.  Footprints differ per role AND per slice type:
+        `donor_units` is the actual cost of the unit that would retire (a
+        typed fleet's donor tier can hold mixed slice classes — the
+        driver reports what its scale-down victim occupies); left None,
+        the legacy per-role footprint / cheapest-type floor is assumed.
+        The receiver side prices the slice :meth:`pick_slice` would
+        choose given the freed units."""
+        du = (donor_units if donor_units is not None
+              else self.budget.cfg.cost(donor))
+        ru = self.budget.cfg.cost(
+            receiver, self.pick_slice(receiver, extra_units=du))
+        return self.budget.available + du >= ru
 
     def decide(self, now: float, ttfts: Sequence[float],
                tpots: Sequence[float], decode_waits: Sequence[float],
@@ -282,7 +327,9 @@ class JointAutoscaler:
                decompress_util: float = 0.0,
                fabric_lag_s: float = 0.0,
                kv_page_util: float = 0.0,
-               refresh_active: bool = False) -> Tuple[int, int]:
+               refresh_active: bool = False,
+               retire_prefill_units: Optional[int] = None,
+               retire_decode_units: Optional[int] = None) -> Tuple[int, int]:
         """(prefill delta, decode delta) for this window, each in -1/0/+1.
 
         Units: latency sequences are per-request **seconds** observed in
@@ -312,7 +359,13 @@ class JointAutoscaler:
         classification — replicas take turns stalled on base swaps, so a
         comfortable window percentile is the rollout hiding load, and
         retiring a replica mid-rollout would churn the replica set the
-        rollout is walking."""
+        rollout is walking.
+
+        ``retire_prefill_units`` / ``retire_decode_units`` (typed pools):
+        the cost units the tier's scale-down victim actually occupies —
+        what a trade would free.  None falls back to the per-role
+        footprint (exact for untyped pools, the cheapest-type floor for
+        typed ones)."""
         cfg = self.cfg
         ttft_p95 = self._p95(ttfts)
         tpot_p95 = self._p95(tpots)
@@ -371,13 +424,15 @@ class JointAutoscaler:
                 # spend quantization error before robbing the other tier
                 d_comp = 1
             elif (dec_cold and n_decode > cfg.min_decode
-                  and self._trade_frees_enough("decode", "prefill")):
+                  and self._trade_frees_enough("decode", "prefill",
+                                               retire_decode_units)):
                 d_pre, d_dec = 1, -1             # trade: decode funds prefill
         elif dec_hot:
             if self.budget.can_allocate("decode"):
                 d_dec = 1
             elif (pre_cold and n_prefill > cfg.min_prefill
-                  and self._trade_frees_enough("prefill", "decode")):
+                  and self._trade_frees_enough("prefill", "decode",
+                                               retire_prefill_units)):
                 d_pre, d_dec = -1, 1             # trade: prefill funds decode
         elif (decompress_util >= cfg.decompress_cold_util
               and self._prev_decompress_util >= cfg.decompress_cold_util
@@ -404,6 +459,16 @@ class JointAutoscaler:
         if d_pre or d_dec or d_comp:
             self._cooldown = cfg.cooldown_intervals
         self._prev_decompress_util = decompress_util
+        pre_slice = dec_slice = None
+        if self.budget.cfg.typed:
+            if d_pre > 0:
+                freed = (retire_decode_units
+                         or self.budget.cfg.cost("decode")) if d_dec < 0 else 0
+                pre_slice = self.pick_slice("prefill", extra_units=freed)
+            if d_dec > 0:
+                freed = (retire_prefill_units
+                         or self.budget.cfg.cost("prefill")) if d_pre < 0 else 0
+                dec_slice = self.pick_slice("decode", extra_units=freed)
         self.history.append(JointScaleDecision(
             t=now, n_prefill=n_prefill, n_decode=n_decode,
             free_accels=self.budget.available, ttft_p95=ttft_p95,
@@ -414,7 +479,9 @@ class JointAutoscaler:
             comp_ceiling=(self.comp_policy.ceiling_mode
                           if self.comp_policy is not None else None),
             fabric_lag_s=fabric_lag_s, kv_page_util=kv_page_util,
-            refresh_active=refresh_active))
+            refresh_active=refresh_active,
+            prefill_slice=pre_slice.name if pre_slice else None,
+            decode_slice=dec_slice.name if dec_slice else None))
         return d_pre, d_dec
 
 

@@ -31,6 +31,17 @@ from .scheduler import Scheduler, SchedulerConfig
 # ---------------------------------------------------------------------------
 
 
+# fused-path cost constants re-derived from wall-clock measurement: the
+# affine decode-step fit (t = step_overhead + per_slot * batch) from
+# benchmarks/real_decode.py's `derived` cell, committed in
+# benchmarks/baselines/BENCH_real.json.  tests/test_hetero.py fails if
+# these and the committed JSON drift apart.  They parameterize
+# ServingHardware.real_calibrated(), NOT the roofline defaults below —
+# changing the live defaults would move every committed baseline.
+REAL_DECODE_STEP_OVERHEAD_S = 0.0012266824722044262
+REAL_DECODE_PER_SLOT_S = 0.0002450057222126311
+
+
 @dataclasses.dataclass
 class ServingHardware:
     """One serving replica (e.g. a 4-chip v5e slice)."""
@@ -40,6 +51,35 @@ class ServingHardware:
     mem_cap_frac: float = 0.4        # paper: cap at 40% of device memory
     mfu_prefill: float = 0.45
     step_overhead: float = 3e-4      # host/dispatch per decode step
+
+    def for_slice(self, slice_type) -> "ServingHardware":
+        """This hardware scaled by a :class:`SliceType
+        <repro.serving.resources.SliceType>`'s factors: ``prefill_speed``
+        scales peak compute (the prefill roofline), ``decode_speed``
+        scales HBM bandwidth (the weight-streaming decode roofline), and
+        the slice's ``hbm_bytes`` replaces the replica's HBM when set.
+        The default slice (all factors 1.0, no HBM override) returns
+        bit-identical figures — ``x * 1.0`` is exact in IEEE 754."""
+        if slice_type is None:
+            return self
+        return dataclasses.replace(
+            self,
+            peak_flops=self.peak_flops * slice_type.prefill_speed,
+            hbm_bw=self.hbm_bw * slice_type.decode_speed,
+            hbm_bytes=(slice_type.hbm_bytes
+                       if slice_type.hbm_bytes is not None
+                       else self.hbm_bytes))
+
+    @classmethod
+    def real_calibrated(cls, **overrides) -> "ServingHardware":
+        """A replica whose per-step dispatch overhead comes from the
+        committed wall-clock fit of the fused decode path
+        (:data:`REAL_DECODE_STEP_OVERHEAD_S`) instead of the roofline
+        guess.  The per-slot slope of the same fit is exported as
+        :data:`REAL_DECODE_PER_SLOT_S` for studies that want the full
+        affine model."""
+        overrides.setdefault("step_overhead", REAL_DECODE_STEP_OVERHEAD_S)
+        return cls(**overrides)
 
 
 @dataclasses.dataclass
@@ -52,6 +92,7 @@ class ModelFootprint:
     jd_sigma_bytes_per_adapter: int
     n_clusters: int = 1
     kv_bytes_per_token: int = 0      # bf16 K+V across layers (disagg handoff)
+    lora_rank: int = 16              # the rank lora_bytes_per_adapter prices
 
     @staticmethod
     def from_config(cfg, rank: int = 16, jd_rank: int = 16,
@@ -95,7 +136,8 @@ class ModelFootprint:
             jd_shared_bytes_per_cluster=shared_b * cfg.num_layers,
             jd_sigma_bytes_per_adapter=sig_b * cfg.num_layers,
             n_clusters=n_clusters,
-            kv_bytes_per_token=2 * 2 * cfg.num_layers * cfg.num_kv_heads * hd)
+            kv_bytes_per_token=2 * 2 * cfg.num_layers * cfg.num_kv_heads * hd,
+            lora_rank=rank)
 
     def pool_config(self, total_bytes: float,
                     adapter_share: Optional[float] = None) -> PagedPoolConfig:
@@ -125,12 +167,26 @@ class CostModelExecutor:
     with mixed raw/compressed slots streams each raw adapter's LoRA
     weights plus the compressed slots' bases and Sigmas.  With
     ``raw_ids`` empty the model is bit-exact with the pre-lifecycle
-    executor."""
+    executor.
+
+    Heterogeneous adapters (PR 10): with ``rank_of`` (adapter id ->
+    LoRA rank) the SGMV-path byte model is per-rank — a rank-r adapter
+    streams ``lora_bytes_per_adapter * padded(r) / lora_rank`` bytes,
+    where ``padded(r)`` rounds r up to the replica slice's native SGMV
+    contraction tile (``slice_type.sgmv_tile_rank``; see
+    :func:`repro.kernels.sgmv.sgmv_tile_cost`).  The padding is what
+    makes placement matter: a rank-4 adapter on a tile-32 slice streams
+    8x its useful bytes.  ``rank_of=None`` keeps the homogeneous
+    per-adapter constant, bit-exact with every committed baseline."""
 
     def __init__(self, hw: ServingHardware, fp: ModelFootprint, mode: str,
-                 cluster_of: Optional[Dict[int, int]] = None):
+                 cluster_of: Optional[Dict[int, int]] = None,
+                 rank_of: Optional[Dict[int, int]] = None,
+                 slice_type=None):
         self.hw, self.fp, self.mode = hw, fp, mode
         self.cluster_of = cluster_of or {}
+        self.rank_of = rank_of
+        self.slice_type = slice_type
         self.raw_ids: set = set()
 
     def mark_raw(self, aid: int) -> None:
@@ -141,10 +197,25 @@ class CostModelExecutor:
         """`aid`'s cluster basis now serves it (refresh rollout complete)."""
         self.raw_ids.discard(aid)
 
+    def lora_adapter_bytes(self, aid: int) -> int:
+        """Bytes one SGMV (uncompressed) adapter streams per decode step.
+
+        Homogeneous (``rank_of=None``): the footprint's per-adapter
+        constant, unchanged.  Heterogeneous: scale it to `aid`'s rank
+        padded up to the slice's native SGMV contraction tile — the
+        per-rank cost :func:`repro.kernels.sgmv.sgmv_tile_cost` prices
+        (a tile of 1 means no padding)."""
+        if self.rank_of is None:
+            return self.fp.lora_bytes_per_adapter
+        r = self.rank_of.get(aid, self.fp.lora_rank)
+        tile = self.slice_type.sgmv_tile_rank if self.slice_type else 1
+        padded = tile * -(-r // tile)
+        return (self.fp.lora_bytes_per_adapter * padded) // self.fp.lora_rank
+
     def adapter_bytes(self, aid: int) -> int:
         if self.mode == "jd" and aid not in self.raw_ids:
             return self.fp.jd_sigma_bytes_per_adapter
-        return self.fp.lora_bytes_per_adapter
+        return self.lora_adapter_bytes(aid)
 
     def shared_bytes(self) -> int:
         if self.mode == "jd":
@@ -164,10 +235,10 @@ class CostModelExecutor:
             ucl = {self.cluster_of.get(a, 0) for a in uniq - raw}
             extra = (len(ucl) * self.fp.jd_shared_bytes_per_cluster
                      + (B - n_raw_slots) * self.fp.jd_sigma_bytes_per_adapter
-                     + len(raw) * self.fp.lora_bytes_per_adapter
+                     + sum(self.lora_adapter_bytes(a) for a in raw)
                      ) / self.hw.hbm_bw
         else:
-            extra = (len(uniq) * self.fp.lora_bytes_per_adapter
+            extra = (sum(self.lora_adapter_bytes(a) for a in uniq)
                      + 0) / self.hw.hbm_bw
         return max(t_w + extra, t_f) + self.hw.step_overhead
 
@@ -228,9 +299,14 @@ class ServingEngine:
     """Simulated-clock continuous-batching engine."""
 
     def __init__(self, cfg: EngineConfig, executor,
-                 cluster_of: Optional[Dict[int, int]] = None):
+                 cluster_of: Optional[Dict[int, int]] = None,
+                 slice_type=None):
         self.cfg = cfg
         self.executor = executor
+        # the hardware slice class this replica occupies (None: the legacy
+        # interchangeable accelerator); the Fleet's rank-aware routing
+        # reads decode_speed and sgmv_tile_rank off it
+        self.slice_type = slice_type
         ex_path = getattr(executor, "decode_path", None)
         if ex_path is not None and ex_path != cfg.decode_path:
             raise ValueError(f"engine decode_path={cfg.decode_path!r} but "

@@ -164,11 +164,16 @@ class PrefillWorker:
 
     def __init__(self, cfg: PrefillConfig, executor,
                  cluster_of: Optional[Dict[int, int]] = None,
-                 fabric: Optional[KVFabric] = None):
+                 fabric: Optional[KVFabric] = None,
+                 slice_type=None):
         if cfg.max_batch < 1:
             raise ValueError("PrefillConfig.max_batch must be >= 1")
         self.cfg = cfg
         self.executor = executor
+        # the hardware slice class this worker occupies (None: the legacy
+        # interchangeable accelerator); run_study releases the matching
+        # budget allocation when the worker retires
+        self.slice_type = slice_type
         self.scheduler = Scheduler(SchedulerConfig(max_batch=cfg.max_batch),
                                    cluster_of)
         self.pool = None if cfg.pool is None else PagedPool(cfg.pool)

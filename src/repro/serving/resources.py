@@ -75,30 +75,137 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 
 # ---------------------------------------------------------------------------
-# hardware budget
+# hardware budget (typed slice pool)
 # ---------------------------------------------------------------------------
+
+
+_ROLES = ("prefill", "decode")
+
+
+@dataclasses.dataclass(frozen=True)
+class SliceType:
+    """One accelerator slice class in a heterogeneous pool.
+
+    A slice type prices and scales everything placement needs to know
+    about one hardware class:
+
+      - ``cost_units`` — what one slice of this type costs against the
+        pool's fixed budget; equal-cost comparisons across types happen
+        in these units, not replica counts.
+      - ``prefill_slices`` / ``decode_slices`` — per-role footprint
+        multipliers: slices of this type one prefill worker / decode
+        replica occupies (the typed generalization of the legacy
+        ``prefill_accels_per_worker`` / ``decode_accels_per_replica``).
+      - ``hbm_bytes`` — the slice's HBM; a replica's :class:`PagedPool`
+        is sized from it.  ``None`` inherits the base
+        :class:`~repro.serving.engine.ServingHardware` figure.
+      - ``fabric_bw`` — interconnect bandwidth (bytes/s) for sizing a
+        :class:`FabricConfig` fed by workers of this type.
+      - ``prefill_speed`` / ``decode_speed`` — factors on the base
+        hardware's prefill compute / HBM streaming rooflines (see
+        :meth:`ServingHardware.for_slice
+        <repro.serving.engine.ServingHardware.for_slice>`).
+      - ``sgmv_tile_rank`` — native contraction-tile width (ranks) of
+        the slice's SGMV pipeline: a rank-r adapter's tiles pad to the
+        next multiple of this, so skinny ranks waste a wide slice and
+        the router should bias them toward narrow ones.  The pure cost
+        model is :func:`repro.kernels.sgmv.sgmv_rank_efficiency`.
+
+    The defaults describe the legacy interchangeable accelerator — unit
+    cost, unit footprints, unit speed factors — so a pool of only this
+    type is arithmetically identical to the pre-typed budget.
+    """
+
+    name: str
+    cost_units: int = 1
+    prefill_slices: int = 1          # per-role footprint multipliers
+    decode_slices: int = 1
+    hbm_bytes: Optional[float] = None    # None: inherit base hardware
+    fabric_bw: Optional[float] = None    # bytes/s; None: fabric default
+    prefill_speed: float = 1.0       # scales peak compute (prefill roofline)
+    decode_speed: float = 1.0        # scales HBM bandwidth (decode roofline)
+    sgmv_tile_rank: int = 8          # native SGMV contraction tile (ranks)
+
+    def footprint(self, role: str) -> int:
+        if role == "prefill":
+            return self.prefill_slices
+        if role == "decode":
+            return self.decode_slices
+        raise ValueError(f"unknown role {role!r}; one of {_ROLES}")
+
+    def cost(self, role: str) -> int:
+        """Cost units one `role` allocation on this slice type consumes."""
+        return self.cost_units * self.footprint(role)
 
 
 @dataclasses.dataclass
 class BudgetConfig:
-    """A fixed pool of accelerators shared by both serving tiers.
+    """A fixed pool of accelerator capacity shared by both serving tiers.
 
-    Units: all three fields are whole **accelerator counts** (chips or
-    slices, not bytes) — ``total_accelerators`` is the pool size,
-    ``prefill_accels_per_worker`` / ``decode_accels_per_replica`` are the
-    per-role footprints one allocation consumes.
+    Two shapes, one config:
+
+    * **Legacy single-type** (the default): the three count fields are
+      whole **accelerator counts** — ``total_accelerators`` is the pool
+      size, ``prefill_accels_per_worker`` / ``decode_accels_per_replica``
+      the per-role footprints one allocation consumes.  This path stays
+      bit-exact with every committed baseline.
+    * **Typed** (``slice_types`` set): the pool is ``total_cost_units``
+      cost units (defaulting to ``total_accelerators``) that allocations
+      spend through a :class:`SliceType`'s ``cost(role)``.  A mixed-slice
+      fleet at the same ``total_cost_units`` is *equal cost* to any
+      homogeneous one — the comparison ``benchmarks/hetero_placement.py``
+      makes.
     """
 
     total_accelerators: int = 8
     prefill_accels_per_worker: int = 1
     decode_accels_per_replica: int = 1
+    # typed pool: the slice classes allocations may draw from, and the
+    # fixed cost-unit budget they share; None keeps the legacy pool
+    slice_types: Optional[Tuple[SliceType, ...]] = None
+    total_cost_units: Optional[int] = None
 
-    def cost(self, role: str) -> int:
-        if role == "prefill":
-            return self.prefill_accels_per_worker
-        if role == "decode":
-            return self.decode_accels_per_replica
-        raise ValueError(f"unknown role {role!r}; one of ('prefill', 'decode')")
+    @property
+    def typed(self) -> bool:
+        return bool(self.slice_types)
+
+    @property
+    def total_units(self) -> int:
+        """Pool size in cost units (== accelerators when untyped)."""
+        if self.total_cost_units is not None:
+            return self.total_cost_units
+        return self.total_accelerators
+
+    def default_slice(self) -> SliceType:
+        """The single slice class a legacy config describes."""
+        return SliceType(name="accel",
+                         prefill_slices=self.prefill_accels_per_worker,
+                         decode_slices=self.decode_accels_per_replica)
+
+    def types(self) -> Tuple[SliceType, ...]:
+        if self.slice_types:
+            return tuple(self.slice_types)
+        return (self.default_slice(),)
+
+    def type_named(self, name: str) -> SliceType:
+        for st in self.types():
+            if st.name == name:
+                return st
+        raise ValueError(f"unknown slice type {name!r}; one of "
+                         f"{[s.name for s in self.types()]}")
+
+    def cost(self, role: str, slice_type: Optional[SliceType] = None) -> int:
+        """Cost units one `role` allocation consumes on `slice_type`.
+
+        With ``slice_type=None``: the legacy per-role footprint for an
+        untyped pool (arithmetic identical to the pre-typed budget), or
+        the *cheapest* type's cost for a typed one — the floor that
+        feasibility checks compare against ``available``."""
+        if slice_type is not None:
+            return slice_type.cost(role)
+        if not self.typed:
+            return self.default_slice().cost(role)
+        return min(st.cost(role) for st in self.types())
 
 
 class HardwareBudget:
@@ -108,9 +215,16 @@ class HardwareBudget:
     raises when the pool is exhausted — callers must check
     :meth:`can_allocate` (or free capacity by retiring from the other role)
     first, which is exactly the trade the joint autoscaler implements.
-    All quantities are accelerator counts (see :class:`BudgetConfig`);
-    per-replica HBM is accounted separately, in pages, by each replica's
+    All quantities are **cost units** (plain accelerator counts for a
+    legacy single-type config — see :class:`BudgetConfig`); per-replica
+    HBM is accounted separately, in pages, by each replica's
     :class:`PagedPool`.
+
+    Conservation invariants, asserted per slice type by
+    ``tests/test_hetero.py``: ``in_use + available == cfg.total_units``
+    after every operation (H1); an allocation whose cost exceeds
+    ``available`` raises instead of overcommitting, and releasing a
+    (role, type) pair with no live allocation raises (H2).
 
     Usage::
 
@@ -120,49 +234,105 @@ class HardwareBudget:
         if budget.can_allocate("decode"):
             budget.allocate("decode")
         budget.release("prefill")            # retire a worker -> pool
+
+    Typed pools name the slice class per allocation::
+
+        big, small = SliceType("big", cost_units=4), SliceType("small")
+        budget = HardwareBudget(BudgetConfig(
+            slice_types=(big, small), total_cost_units=8))
+        budget.allocate("prefill", big)      # 4 units (4 free)
+        budget.allocate("decode", small)     # 1 unit  (3 free)
+        budget.release("prefill", big)
     """
 
     def __init__(self, cfg: BudgetConfig):
-        if cfg.total_accelerators < 1:
+        if cfg.total_units < 1:
             raise ValueError("budget needs at least one accelerator")
+        if cfg.typed:
+            names = [st.name for st in cfg.types()]
+            if len(set(names)) != len(names):
+                raise ValueError(f"duplicate slice type names: {names}")
         self.cfg = cfg
-        self.allocated: Dict[str, int] = {"prefill": 0, "decode": 0}
+        # role -> slice type name -> live allocation count
+        self._alloc: Dict[str, Dict[str, int]] = {r: {} for r in _ROLES}
+
+    def _resolve(self, role: str,
+                 slice_type: Optional[SliceType]) -> SliceType:
+        if role not in _ROLES:
+            raise ValueError(f"unknown role {role!r}; one of {_ROLES}")
+        if slice_type is None:
+            if self.cfg.typed:
+                raise ValueError(
+                    f"typed budget needs an explicit slice type; one of "
+                    f"{[s.name for s in self.cfg.types()]}")
+            return self.cfg.default_slice()
+        return self.cfg.type_named(slice_type.name)
+
+    @property
+    def allocated(self) -> Dict[str, int]:
+        """Legacy view: role -> total allocation count over all types."""
+        return {role: sum(d.values()) for role, d in self._alloc.items()}
 
     @property
     def in_use(self) -> int:
-        return sum(self.allocated[role] * self.cfg.cost(role)
-                   for role in self.allocated)
+        return sum(n * self.cfg.type_named(t).cost(role)
+                   for role, d in self._alloc.items()
+                   for t, n in d.items())
 
     @property
     def available(self) -> int:
-        return self.cfg.total_accelerators - self.in_use
+        return self.cfg.total_units - self.in_use
 
-    def count(self, role: str) -> int:
-        return self.allocated[role]
+    def count(self, role: str,
+              slice_type: Optional[SliceType] = None) -> int:
+        if slice_type is not None:
+            return self._alloc[role].get(slice_type.name, 0)
+        return sum(self._alloc[role].values())
 
-    def can_allocate(self, role: str) -> bool:
-        return self.cfg.cost(role) <= self.available
+    def can_allocate(self, role: str,
+                     slice_type: Optional[SliceType] = None) -> bool:
+        """Whether one `role` allocation fits: on `slice_type` when named,
+        else on the legacy type (untyped pool) / the cheapest type."""
+        return self.cfg.cost(role, slice_type) <= self.available
 
-    def allocate(self, role: str) -> None:
-        if not self.can_allocate(role):
+    def allocate(self, role: str,
+                 slice_type: Optional[SliceType] = None) -> SliceType:
+        """Spend one `role` allocation; returns the slice type it landed
+        on.  An untyped pool resolves ``slice_type=None`` to the legacy
+        accelerator; a typed pool requires the caller to name the type
+        (the autoscaler's ``pick_slice`` choice)."""
+        st = self._resolve(role, slice_type)
+        if st.cost(role) > self.available:
             raise MemoryError(
                 f"hardware budget exhausted: {role} needs "
-                f"{self.cfg.cost(role)} accelerators, {self.available} free "
-                f"of {self.cfg.total_accelerators}")
-        self.allocated[role] += 1
+                f"{st.cost(role)} accelerators, {self.available} free "
+                f"of {self.cfg.total_units}")
+        d = self._alloc[role]
+        d[st.name] = d.get(st.name, 0) + 1
+        return st
 
-    def release(self, role: str) -> None:
-        if self.allocated[role] < 1:
+    def release(self, role: str,
+                slice_type: Optional[SliceType] = None) -> None:
+        if slice_type is None and self.cfg.typed:
+            held = [t for t, n in self._alloc[role].items() if n > 0]
+            if len(held) == 1:       # unambiguous: only one type held
+                slice_type = self.cfg.type_named(held[0])
+        st = self._resolve(role, slice_type)
+        if self._alloc[role].get(st.name, 0) < 1:
             raise ValueError(f"no {role} allocation to release")
-        self.allocated[role] -= 1
+        self._alloc[role][st.name] -= 1
 
     def to_dict(self) -> Dict:
-        return {
-            "total_accelerators": self.cfg.total_accelerators,
-            "prefill_workers": self.allocated["prefill"],
-            "decode_replicas": self.allocated["decode"],
+        d = {
+            "total_accelerators": self.cfg.total_units,
+            "prefill_workers": self.count("prefill"),
+            "decode_replicas": self.count("decode"),
             "accelerators_free": self.available,
         }
+        if self.cfg.typed:
+            d["slices"] = {role: {t: n for t, n in alloc.items() if n}
+                           for role, alloc in self._alloc.items()}
+        return d
 
 
 # ---------------------------------------------------------------------------

@@ -61,6 +61,22 @@ POLICIES = ("round_robin", "least_outstanding", "adapter_affinity",
             "cluster_affinity")
 
 
+def rank_efficiency(rank: int, tile_rank: int = 8) -> float:
+    """Useful fraction of the SGMV rank lanes a rank-`rank` adapter
+    occupies on a slice whose native contraction tile is `tile_rank` wide:
+    ``rank / (tile_rank * ceil(rank / tile_rank))``, in (0, 1].
+
+    Jax-free mirror of :func:`repro.kernels.sgmv.sgmv_rank_efficiency`
+    (the router must stay importable without jax, the same reason
+    PAGE_TOKENS is duplicated); ``tests/test_hetero.py`` asserts the two
+    agree (invariant H4)."""
+    if rank < 1:
+        raise ValueError("rank must be >= 1")
+    if tile_rank < 1:
+        raise ValueError("tile_rank must be >= 1")
+    return rank / (tile_rank * -(-rank // tile_rank))
+
+
 @dataclasses.dataclass
 class FleetConfig:
     n_replicas: int = 1
@@ -83,6 +99,21 @@ class FleetConfig:
     # traffic competes with prefill handoffs for the same wire.  None
     # builds a default FabricConfig lazily on first migration.
     migration_fabric: Optional[FabricConfig] = None
+    # rank-aware placement (PR 10): bias the affinity policies by each
+    # replica's rank-efficiency score — decode speed times the SGMV tile
+    # efficiency of the request's adapter rank on that replica's slice
+    # (rank_efficiency; the jax mirror is kernels/sgmv.py) — so high-rank
+    # adapters land on wide-tile slices and skinny ranks on narrow ones.
+    # Needs a Fleet built with `rank_of`; off (the default) is bit-exact
+    # with the rank-blind router.
+    rank_aware: bool = False
+    # what a mid-run-attached replica's routed-load estimate starts at:
+    # "zero" (legacy — the cold replica compares a full-history backlog
+    # against warm peers and hot-spots until it catches up) or
+    # "peer_mean" (the mean of its active peers' estimates, so it joins
+    # the spill comparison as an average citizen and picks up work as
+    # peers pull ahead)
+    routed_load_seed: str = "zero"
 
 
 @dataclasses.dataclass
@@ -184,13 +215,20 @@ class Fleet:
 
     def __init__(self, cfg: FleetConfig, engines: Sequence[ServingEngine],
                  cluster_of: Optional[Dict[int, int]] = None,
-                 prefill_tier: Optional[PrefillTier] = None):
+                 prefill_tier: Optional[PrefillTier] = None,
+                 rank_of: Optional[Dict[int, int]] = None):
         if len(engines) != cfg.n_replicas:
             raise ValueError(f"expected {cfg.n_replicas} engines, "
                              f"got {len(engines)}")
         if cfg.policy not in POLICIES:
             raise ValueError(f"unknown policy {cfg.policy!r}; "
                              f"one of {POLICIES}")
+        if cfg.routed_load_seed not in ("zero", "peer_mean"):
+            raise ValueError(f"routed_load_seed must be 'zero' or "
+                             f"'peer_mean', got {cfg.routed_load_seed!r}")
+        if cfg.rank_aware and rank_of is None:
+            raise ValueError("rank_aware routing needs a rank_of map "
+                             "(adapter id -> LoRA rank)")
         if cfg.disaggregated != (prefill_tier is not None):
             raise ValueError("disaggregated fleets need a prefill_tier and "
                              "colocated fleets must not pass one: got "
@@ -199,6 +237,7 @@ class Fleet:
         self.cfg = cfg
         self.engines = list(engines)
         self.cluster_of = cluster_of or {}
+        self.rank_of = rank_of or {}
         self.prefill_tier = prefill_tier
         self.active: List[bool] = [True] * len(engines)
         self._rr = 0
@@ -218,11 +257,24 @@ class Fleet:
 
         Existing affinity homes stay valid (the new replica holds none), so
         warm adapters keep their cache locality; the new replica fills up
-        through first sightings and bounded spill."""
+        through first sightings and bounded spill.
+
+        Its routed-load estimate starts per ``FleetConfig.routed_load_seed``:
+        at zero (legacy — against peers carrying a full run's cumulative
+        estimate the newcomer looks infinitely light, so every spill and
+        first sighting dumps there until it catches up), or at the mean of
+        its active peers' estimates (``"peer_mean"`` — it enters the spill
+        comparison as an average citizen and starts receiving work within
+        a window as peers pull ahead, without the hot-spot)."""
+        seed = 0.0
+        if self.cfg.routed_load_seed == "peer_mean":
+            peers = [self._routed_load[i] for i in self._active_idxs()]
+            if peers:
+                seed = sum(peers) / len(peers)
         engine.clock = max(engine.clock, now)
         self.engines.append(engine)
         self.active.append(True)
-        self._routed_load.append(0.0)
+        self._routed_load.append(seed)
         self.scale_events += 1
         return len(self.engines) - 1
 
@@ -414,11 +466,38 @@ class Fleet:
             return self.cluster_of.get(req.adapter_id, req.adapter_id)
         return req.adapter_id
 
+    def _rank_score(self, i: int, rank: int) -> float:
+        """Replica `i`'s effective decode throughput for a rank-`rank`
+        adapter: the slice's decode-speed factor discounted by the SGMV
+        tile efficiency of that rank on the slice's native tile width.
+        Replicas without a slice type score as the legacy accelerator
+        (speed 1.0, tile 8)."""
+        st = getattr(self.engines[i], "slice_type", None)
+        speed = st.decode_speed if st is not None else 1.0
+        tile = st.sgmv_tile_rank if st is not None else 8
+        return speed * rank_efficiency(rank, tile)
+
     def _route_affinity(self, req: Request) -> int:
         key = self._affinity_key(req)
         home = self._home.get(key)
         idxs = self._active_idxs()
-        lightest = min(idxs, key=lambda i: (self._routed_load[i], i))
+        rank = (self.rank_of.get(req.adapter_id)
+                if self.cfg.rank_aware else None)
+        if rank is None:
+            lightest = min(idxs, key=lambda i: (self._routed_load[i], i))
+        else:
+            # rank-aware: the best replica minimizes this request's
+            # effective finish estimate — queued work plus one average
+            # request, deflated by the replica's rank score — so a fast
+            # wide-tile slice absorbs high-rank adapters (its padding is
+            # free there) while skinny ranks prefer narrow-tile replicas
+            # even when the wide slice has spare capacity.  Ties (notably
+            # an idle fleet, where every estimate is zero) break toward
+            # the higher rank score, then the lower index.
+            w = self._avg_request_work()
+            lightest = min(idxs, key=lambda i: (
+                (self._routed_load[i] + w) / self._rank_score(i, rank),
+                -self._rank_score(i, rank), i))
         if home is None or not self.active[home]:
             # first sighting (or home retired): place on the least-loaded
             # active replica

@@ -30,6 +30,7 @@ loop instead of forking a sixth driver copy; results come back as one
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
@@ -45,7 +46,8 @@ from repro.serving.lifecycle import (AdapterLifecycle, LifecycleEvent,
 from repro.serving.migration import MigrationPolicy
 from repro.serving.prefill import PrefillConfig, PrefillTier, PrefillWorker
 from repro.serving.request import Request
-from repro.serving.resources import (BudgetConfig, HardwareBudget,
+from repro.serving.resources import (PAGE_TOKENS, BudgetConfig,
+                                     HardwareBudget, SliceType,
                                      merge_mode_dict)
 from repro.serving.router import Fleet, FleetConfig, FleetStats
 from repro.serving.scheduler import SchedulerConfig
@@ -106,12 +108,22 @@ def serving_footprint(model_cfg, mode: str, n_adapters: int,
     return fp
 
 
+def slice_pool_bytes(fp: ModelFootprint, hw: ServingHardware) -> float:
+    """The unified-pool region a replica on (slice-scaled) hardware `hw`
+    actually has: the serving cap of its HBM minus the resident base
+    weights, floored at one page so a tiny slice still constructs."""
+    page = fp.kv_bytes_per_token * PAGE_TOKENS
+    return max(hw.hbm_bytes * hw.mem_cap_frac - fp.weight_bytes, page)
+
+
 def build_engine(model_cfg, mode: str, n_adapters: int, budget: float,
                  hw: ServingHardware, cluster_of: Dict[int, int],
                  setting: Dict, max_batch: int = 32,
                  prefetch: bool = False,
                  pool_bytes: Optional[float] = None,
-                 pool_adapter_share: Optional[float] = None) -> ServingEngine:
+                 pool_adapter_share: Optional[float] = None,
+                 slice_type: Optional[SliceType] = None,
+                 rank_of: Optional[Dict[int, int]] = None) -> ServingEngine:
     """One cost-model decode replica (also the autoscaler's engine factory).
 
     With `pool_bytes` the replica runs unified paging: adapter weights and
@@ -119,41 +131,56 @@ def build_engine(model_cfg, mode: str, n_adapters: int, budget: float,
     (`pool_adapter_share` carves the static-split baseline out of the same
     machinery); `budget` is then ignored.  Without it, the legacy
     byte-budget adapter cache is used, bit-exact with the pre-paging
-    engine."""
+    engine.
+
+    With `slice_type` the replica is typed: its hardware is scaled by the
+    slice's speed factors and HBM (``ServingHardware.for_slice``), the
+    executor prices per-rank SGMV padding against the slice's tile, and
+    ``pool_bytes="slice"`` sizes the paged pool from the slice's own HBM
+    (:func:`slice_pool_bytes`) instead of a caller-fixed region."""
     fp = serving_footprint(model_cfg, mode, n_adapters, setting)
-    ex = CostModelExecutor(hw, fp, mode, cluster_of)
+    hw = hw.for_slice(slice_type)
+    if pool_bytes == "slice":
+        pool_bytes = slice_pool_bytes(fp, hw)
+    ex = CostModelExecutor(hw, fp, mode, cluster_of, rank_of=rank_of,
+                           slice_type=slice_type)
     pool = (None if pool_bytes is None else
             fp.pool_config(pool_bytes, adapter_share=pool_adapter_share))
     return ServingEngine(
         EngineConfig(scheduler=SchedulerConfig(max_batch=max_batch),
                      adapter_budget_bytes=budget, mode=mode,
                      prefetch=prefetch, pool=pool),
-        ex, cluster_of)
+        ex, cluster_of, slice_type=slice_type)
 
 
 def build_prefill_worker(model_cfg, mode: str, n_adapters: int, budget: float,
                          prefill_cfg: PrefillConfig, hw: ServingHardware,
-                         cluster_of: Dict[int, int],
-                         setting: Dict) -> PrefillWorker:
-    """One prefill worker (also the joint autoscaler's prefill factory)."""
+                         cluster_of: Dict[int, int], setting: Dict,
+                         slice_type: Optional[SliceType] = None
+                         ) -> PrefillWorker:
+    """One prefill worker (also the joint autoscaler's prefill factory).
+    With `slice_type` the worker's compute roofline is scaled by the
+    slice's ``prefill_speed``."""
     fp = serving_footprint(model_cfg, mode, n_adapters, setting)
+    hw = hw.for_slice(slice_type)
     cfg = dataclasses.replace(prefill_cfg, mode=mode,
                               adapter_budget_bytes=budget)
     return PrefillWorker(cfg, CostModelExecutor(hw, fp, mode, cluster_of),
-                         cluster_of)
+                         cluster_of, slice_type=slice_type)
 
 
 def build_prefill_tier(model_cfg, mode: str, n_adapters: int, budget: float,
                        prefill_cfg: PrefillConfig, hw: ServingHardware,
-                       cluster_of: Dict[int, int],
-                       setting: Dict) -> PrefillTier:
+                       cluster_of: Dict[int, int], setting: Dict,
+                       slice_type: Optional[SliceType] = None) -> PrefillTier:
     """Prefill workers with the same footprint/cost model and per-worker
     adapter budget as the decode tier (adapters must be resident on the
     prefill device too); all workers share the tier's KV fabric."""
     cfg = dataclasses.replace(prefill_cfg, mode=mode,
                               adapter_budget_bytes=budget)
     workers = [build_prefill_worker(model_cfg, mode, n_adapters, budget,
-                                    prefill_cfg, hw, cluster_of, setting)
+                                    prefill_cfg, hw, cluster_of, setting,
+                                    slice_type=slice_type)
                for _ in range(cfg.n_workers)]
     return PrefillTier(cfg, workers)
 
@@ -164,25 +191,45 @@ def build_fleet(model_cfg, mode: str, n_adapters: int, budget: float,
                 max_batch: int = 32, prefetch: bool = False,
                 prefill_cfg: Optional[PrefillConfig] = None,
                 pool_bytes: Optional[float] = None,
-                pool_adapter_share: Optional[float] = None) -> Fleet:
-    """N identical replicas of the cost-model engine for `mode`.
+                pool_adapter_share: Optional[float] = None,
+                decode_slice_types: Optional[Sequence[SliceType]] = None,
+                prefill_slice_type: Optional[SliceType] = None,
+                rank_of: Optional[Dict[int, int]] = None) -> Fleet:
+    """N replicas of the cost-model engine for `mode`.
 
     Budget is per replica (each replica owns an HBM adapter region).  With
     `prefill_cfg` the fleet is disaggregated: a prefill tier (own workers,
     caches, and KV transfer link) feeds the decode replicas.  With
     `pool_bytes` each decode replica runs unified paging (see
-    :func:`build_engine`)."""
+    :func:`build_engine`).
+
+    Heterogeneous fleets: `decode_slice_types` names each replica's slice
+    class (one entry per replica — replicas need no longer be identical),
+    `prefill_slice_type` types the whole prefill tier, and `rank_of`
+    (adapter id -> LoRA rank) feeds both the executors' per-rank byte
+    model and the router's rank-aware placement
+    (``FleetConfig.rank_aware``)."""
+    if (decode_slice_types is not None
+            and len(decode_slice_types) != fleet_cfg.n_replicas):
+        raise ValueError(f"decode_slice_types names "
+                         f"{len(decode_slice_types)} replicas, fleet has "
+                         f"{fleet_cfg.n_replicas}")
     engines = [build_engine(model_cfg, mode, n_adapters, budget, hw,
                             cluster_of, setting, max_batch, prefetch,
                             pool_bytes=pool_bytes,
-                            pool_adapter_share=pool_adapter_share)
-               for _ in range(fleet_cfg.n_replicas)]
+                            pool_adapter_share=pool_adapter_share,
+                            slice_type=(decode_slice_types[k]
+                                        if decode_slice_types else None),
+                            rank_of=rank_of)
+               for k in range(fleet_cfg.n_replicas)]
     tier = None
     if prefill_cfg is not None:
         fleet_cfg = dataclasses.replace(fleet_cfg, disaggregated=True)
         tier = build_prefill_tier(model_cfg, mode, n_adapters, budget,
-                                  prefill_cfg, hw, cluster_of, setting)
-    return Fleet(fleet_cfg, engines, cluster_of, prefill_tier=tier)
+                                  prefill_cfg, hw, cluster_of, setting,
+                                  slice_type=prefill_slice_type)
+    return Fleet(fleet_cfg, engines, cluster_of, prefill_tier=tier,
+                 rank_of=rank_of)
 
 
 # ---------------------------------------------------------------------------
@@ -304,6 +351,20 @@ def _chain_finish(eng: ServingEngine, cb: Callable[[Request], None]) -> None:
         eng.on_finish = chained
 
 
+def _call_factory(factory, slice_type: Optional[SliceType]):
+    """Build a unit from an autoscaler factory, forwarding the chosen
+    slice type only when the factory can take one — legacy zero-arg
+    factories (and untyped budgets, where `slice_type` is None) keep
+    working unchanged."""
+    if slice_type is None:
+        return factory()
+    try:
+        params = inspect.signature(factory).parameters
+    except (TypeError, ValueError):   # builtins / odd callables
+        return factory()
+    return factory(slice_type) if params else factory()
+
+
 def _apply_study_event(ev, state: StudyState) -> None:
     if isinstance(ev, LifecycleEvent):
         if state.lifecycle is None:
@@ -376,8 +437,15 @@ def run_study(fleet: Fleet,
     budget = autoscaler.budget if joint else None
     if joint:
         n_dec0 = len(fleet._active_idxs())
-        need = (tier.n_active * budget.cfg.cost("prefill")
-                + n_dec0 * budget.cfg.cost("decode"))
+        # each live unit is charged for its *own* slice type (None on a
+        # legacy unit resolves to the budget's default slice, so the
+        # untyped path is arithmetically unchanged)
+        pre_types = [getattr(tier.workers[k], "slice_type", None)
+                     for k in tier._active_idxs()]
+        dec_types = [getattr(fleet.engines[k], "slice_type", None)
+                     for k in fleet._active_idxs()]
+        need = (sum(budget.cfg.cost("prefill", s) for s in pre_types)
+                + sum(budget.cfg.cost("decode", s) for s in dec_types))
         if need > budget.available:
             # fail at construction time with a clear message instead of
             # dying mid-run inside HardwareBudget.allocate
@@ -385,11 +453,11 @@ def run_study(fleet: Fleet,
                 f"budget too small for the initial split: {tier.n_active} "
                 f"prefill x {budget.cfg.cost('prefill')} accels + {n_dec0} "
                 f"decode x {budget.cfg.cost('decode')} accels needs {need}, "
-                f"{budget.available} free of {budget.cfg.total_accelerators}")
-        for _ in range(tier.n_active):
-            budget.allocate("prefill")
-        for _ in range(n_dec0):
-            budget.allocate("decode")
+                f"{budget.available} free of {budget.cfg.total_units}")
+        for s in pre_types:
+            budget.allocate("prefill", s)
+        for s in dec_types:
+            budget.allocate("decode", s)
         if autoscaler.comp_policy is None and tier.fabric.policy is not None:
             autoscaler.bind_compression(tier.fabric.policy)
 
@@ -493,26 +561,51 @@ def run_study(fleet: Fleet,
                      / fleet.engines[k].pool.total_pages
                      for k in fleet._active_idxs()
                      if fleet.engines[k].pool is not None), default=0.0)
+                # retirement always takes the newest unit, so tell the
+                # autoscaler how many cost units *that* unit would free —
+                # on a typed pool a trade must be priced in the donor's
+                # actual slice, not the config-wide minimum
+                retire_pre_units = retire_dec_units = None
+                if budget.cfg.typed:
+                    pact, dact = tier._active_idxs(), fleet._active_idxs()
+                    if pact:
+                        retire_pre_units = budget.cfg.cost(
+                            "prefill",
+                            getattr(tier.workers[pact[-1]],
+                                    "slice_type", None))
+                    if dact:
+                        retire_dec_units = budget.cfg.cost(
+                            "decode",
+                            getattr(fleet.engines[dact[-1]],
+                                    "slice_type", None))
                 d_pre, d_dec = autoscaler.decide(
                     t, ttfts, tpots, dwaits, pre_lags, tier.n_active,
                     n_dec_active, prefill_backlog, decode_backlog,
                     decompress_util=decomp_total / (dt * max(n_dec_active,
                                                              1)),
                     fabric_lag_s=max(0.0, tier.fabric.free_at - t),
-                    kv_page_util=kv_page_util)
+                    kv_page_util=kv_page_util,
+                    retire_prefill_units=retire_pre_units,
+                    retire_decode_units=retire_dec_units)
                 if d_dec < 0:
-                    fleet.retire_replica(fleet._active_idxs()[-1],
-                                         migrate=mig_retire, now=t)
-                    budget.release("decode")
+                    victim = fleet._active_idxs()[-1]
+                    vst = getattr(fleet.engines[victim], "slice_type", None)
+                    fleet.retire_replica(victim, migrate=mig_retire, now=t)
+                    budget.release("decode", vst)
                 if d_pre < 0:
-                    tier.retire_worker(tier._active_idxs()[-1])
-                    budget.release("prefill")
+                    pv = tier._active_idxs()[-1]
+                    vst = getattr(tier.workers[pv], "slice_type", None)
+                    tier.retire_worker(pv)
+                    budget.release("prefill", vst)
                 if d_pre > 0:
-                    budget.allocate("prefill")
-                    tier.add_worker(prefill_factory(), now=t)
+                    st = autoscaler.pick_slice("prefill")
+                    budget.allocate("prefill", st)
+                    tier.add_worker(_call_factory(prefill_factory, st),
+                                    now=t)
                 if d_dec > 0:
-                    budget.allocate("decode")
-                    state.attach_engine(decode_factory())
+                    st = autoscaler.pick_slice("decode")
+                    budget.allocate("decode", st)
+                    state.attach_engine(_call_factory(decode_factory, st))
             else:
                 # decisions see only decode-actionable work: requests
                 # whose KV is still in prefill/transfer (ready_time > t)
@@ -581,7 +674,10 @@ def run_elastic_study(model_cfg, mode: str, n_adapters: int,
                       pool_adapter_share: Optional[float] = None,
                       migration: Optional[MigrationPolicy] = None,
                       events: Optional[Sequence] = None,
-                      report: bool = False
+                      report: bool = False,
+                      decode_slice_types: Optional[Sequence[SliceType]] = None,
+                      prefill_slice_type: Optional[SliceType] = None,
+                      rank_of: Optional[Dict[int, int]] = None
                       ) -> Union[FleetStats, StudyReport]:
     """One serving cell, optionally disaggregated and/or autoscaled.
 
@@ -605,6 +701,11 @@ def run_elastic_study(model_cfg, mode: str, n_adapters: int,
     With `pool_bytes` every decode replica (including ones the autoscaler
     adds) runs unified paging over a pool of that size;
     `pool_adapter_share` selects the static-split baseline.
+    Heterogeneous cells: `decode_slice_types` / `prefill_slice_type` type
+    the starting fleet (see :func:`build_fleet`), `rank_of` feeds the
+    per-rank byte model and rank-aware routing, and a typed `budget_cfg`
+    lets the joint autoscaler pick *which* slice class each scale-up adds
+    (the factories here accept the chosen type).
     Returns merged :class:`FleetStats` (``stats.autoscaler`` holds the
     decision history when autoscaled; the prefill dict carries per-mode
     wire-byte totals), or the full :class:`StudyReport` with
@@ -615,13 +716,18 @@ def run_elastic_study(model_cfg, mode: str, n_adapters: int,
     fleet = build_fleet(model_cfg, mode, n_adapters, budget, fleet_cfg, hw,
                         cluster_of, setting, max_batch,
                         prefill_cfg=prefill_cfg, pool_bytes=pool_bytes,
-                        pool_adapter_share=pool_adapter_share)
+                        pool_adapter_share=pool_adapter_share,
+                        decode_slice_types=decode_slice_types,
+                        prefill_slice_type=prefill_slice_type,
+                        rank_of=rank_of)
 
-    def decode_factory() -> ServingEngine:
+    def decode_factory(slice_type: Optional[SliceType] = None
+                       ) -> ServingEngine:
         return build_engine(model_cfg, mode, n_adapters, budget, hw,
                             cluster_of, setting, max_batch,
                             pool_bytes=pool_bytes,
-                            pool_adapter_share=pool_adapter_share)
+                            pool_adapter_share=pool_adapter_share,
+                            slice_type=slice_type, rank_of=rank_of)
 
     if budget_cfg is not None:
         if prefill_cfg is None:
@@ -631,9 +737,11 @@ def run_elastic_study(model_cfg, mode: str, n_adapters: int,
                                  slo or SLOConfig(),
                                  HardwareBudget(budget_cfg))
 
-        def prefill_factory() -> PrefillWorker:
+        def prefill_factory(slice_type: Optional[SliceType] = None
+                            ) -> PrefillWorker:
             return build_prefill_worker(model_cfg, mode, n_adapters, budget,
-                                        prefill_cfg, hw, cluster_of, setting)
+                                        prefill_cfg, hw, cluster_of, setting,
+                                        slice_type=slice_type)
 
         rep = run_study(fleet, requests, autoscaler=scaler,
                         decode_factory=decode_factory,

@@ -1,0 +1,548 @@
+"""Typed hardware slices + rank-aware placement (docs/architecture.md §9).
+
+Covers the four §9 invariants — H1 per-type conservation, H2
+no-overcommit, H3 legacy single-type equivalence (down to bit-exact
+reproduction of the committed joint/adaptive baselines), H4 the router's
+jax-free rank-efficiency mirror of the SGMV tile cost model — plus the
+satellites: slice-aware autoscaler type choice, peer-mean routed-load
+seeding for mid-run-attached replicas, and the real-decode calibration
+constants staying in sync with ``BENCH_real.json``.
+"""
+import json
+import pathlib
+
+import pytest
+
+from repro.serving.adapter_cache import AdapterCache, CacheConfig, DMAModel
+from repro.serving.autoscaler import (JointAutoscaler, JointAutoscalerConfig,
+                                      SLOConfig)
+from repro.serving.engine import (REAL_DECODE_PER_SLOT_S,
+                                  REAL_DECODE_STEP_OVERHEAD_S,
+                                  CostModelExecutor, EngineConfig,
+                                  ModelFootprint, ServingEngine,
+                                  ServingHardware)
+from repro.serving.request import Request
+from repro.serving.resources import BudgetConfig, HardwareBudget, SliceType
+from repro.serving.router import Fleet, FleetConfig, rank_efficiency
+from repro.serving.scheduler import SchedulerConfig
+
+BASELINES = pathlib.Path(__file__).parent.parent / "benchmarks" / "baselines"
+
+BIG = SliceType("big", cost_units=4, prefill_speed=4.0, decode_speed=2.0,
+                sgmv_tile_rank=32)
+SMALL = SliceType("small")
+
+
+def _typed(total=8, types=(BIG, SMALL)):
+    return HardwareBudget(BudgetConfig(slice_types=tuple(types),
+                                       total_cost_units=total))
+
+
+# ---------------------------------------------------------------------------
+# H1: conservation — in_use + available == total_units, per-type ledger
+# ---------------------------------------------------------------------------
+
+
+def test_typed_ledger_conserves_units():  # H1
+    b = _typed(total=8)
+    assert b.in_use == 0 and b.available == 8
+    b.allocate("prefill", BIG)
+    b.allocate("decode", SMALL)
+    b.allocate("decode", SMALL)
+    assert b.in_use == 6 and b.available == 2
+    assert b.in_use + b.available == b.cfg.total_units  # H1
+    assert b.count("decode", SMALL) == 2
+    assert b.count("decode", BIG) == 0
+    assert b.count("decode") == 2 and b.count("prefill") == 1
+    b.release("decode", SMALL)
+    assert b.in_use + b.available == b.cfg.total_units  # H1
+    assert b.available == 3
+    b.release("prefill", BIG)
+    assert b.in_use == 1 and b.available == 7
+
+
+def test_typed_footprints_price_in_cost_units():  # H1
+    fat = SliceType("fat", cost_units=2, prefill_slices=3, decode_slices=1)
+    b = _typed(total=12, types=(fat,))
+    assert b.cfg.cost("prefill", fat) == 6      # 2 units x 3 slices
+    assert b.cfg.cost("decode", fat) == 2
+    b.allocate("prefill", fat)
+    b.allocate("decode", fat)
+    assert b.in_use == 8 and b.available == 4
+    assert b.allocated == {"prefill": 1, "decode": 1}
+
+
+def test_legacy_allocated_view_sums_types():  # H1
+    b = _typed(total=8)
+    b.allocate("decode", BIG)
+    b.allocate("decode", SMALL)
+    assert b.allocated == {"prefill": 0, "decode": 2}
+    assert b.to_dict()["slices"]["decode"] == {"big": 1, "small": 1}
+
+
+# ---------------------------------------------------------------------------
+# H2: no overcommit — exhaustion raises, bad releases raise
+# ---------------------------------------------------------------------------
+
+
+def test_typed_exhaustion_raises():  # H2
+    b = _typed(total=5)
+    b.allocate("prefill", BIG)              # 1 unit left
+    assert b.can_allocate("decode", SMALL)
+    assert not b.can_allocate("decode", BIG)
+    with pytest.raises(MemoryError):
+        b.allocate("decode", BIG)           # would need 4 > 1
+    b.allocate("decode", SMALL)
+    assert b.available == 0
+    assert not b.can_allocate("decode")     # even the cheapest type
+    with pytest.raises(MemoryError):
+        b.allocate("decode", SMALL)
+
+
+def test_typed_release_requires_live_allocation():  # H2
+    b = _typed(total=8)
+    b.allocate("decode", SMALL)
+    with pytest.raises(ValueError, match="no decode allocation"):
+        b.release("decode", BIG)            # type never allocated
+    with pytest.raises(ValueError, match="no prefill allocation"):
+        b.release("prefill", SMALL)
+    # sole-held-type release may omit the type; ambiguous may not
+    b.release("decode")
+    b.allocate("decode", SMALL)
+    b.allocate("decode", BIG)
+    with pytest.raises(ValueError, match="unknown slice type"):
+        b.release("decode", SliceType("other"))
+    with pytest.raises(ValueError):
+        b.release("decode")                 # two types held: ambiguous
+
+
+def test_typed_pool_validation():  # H2
+    with pytest.raises(ValueError, match="explicit slice type"):
+        _typed().allocate("decode")         # typed pool: must name a type
+    with pytest.raises(ValueError, match="unknown slice type"):
+        _typed().allocate("decode", SliceType("tpu9"))
+    with pytest.raises(ValueError, match="duplicate"):
+        _typed(types=(SMALL, SliceType("small", cost_units=2)))
+    with pytest.raises(ValueError, match="unknown role"):
+        _typed().allocate("train", SMALL)
+    with pytest.raises(ValueError):
+        HardwareBudget(BudgetConfig(slice_types=(SMALL,),
+                                    total_cost_units=0))
+
+
+# ---------------------------------------------------------------------------
+# H3: a single-type pool is arithmetically the legacy budget
+# ---------------------------------------------------------------------------
+
+
+def test_single_type_pool_matches_legacy_ledger():  # H3
+    legacy = HardwareBudget(BudgetConfig(total_accelerators=6,
+                                         prefill_accels_per_worker=2))
+    accel = SliceType("accel", prefill_slices=2)
+    typed = HardwareBudget(BudgetConfig(slice_types=(accel,),
+                                        total_cost_units=6))
+    trace = [("allocate", "prefill"), ("allocate", "decode"),
+             ("allocate", "decode"), ("release", "decode"),
+             ("allocate", "prefill")]
+    for op, role in trace:
+        getattr(legacy, op)(role)
+        getattr(typed, op)(role, accel)
+        assert typed.in_use == legacy.in_use
+        assert typed.available == legacy.available
+        assert typed.allocated == legacy.allocated
+    assert not legacy.can_allocate("prefill")   # 1 free < 2-accel footprint
+    assert not typed.can_allocate("prefill", accel)
+
+
+def test_joint_auto_cell_bit_exact_with_committed_baseline():  # H3
+    """The refactored budget/autoscaler/router stack reproduces PR 3's
+    committed jointly-autoscaled cell bit-exactly through the legacy
+    untyped config."""
+    from benchmarks.joint_budget import joint_cell, phase_shift_workload
+    from repro.configs import get_config
+
+    reqs = phase_shift_workload(alpha=1.0)[:1000]   # the quick cell
+    stats = joint_cell(get_config("mistral-7b"), reqs, 6, 0.4)
+    with open(BASELINES / "BENCH_joint.json") as f:
+        baseline = json.load(f)
+    assert stats.total.throughput_rps == pytest.approx(
+        baseline["joint_zipf1.0_b6_fab50g_auto"]["rps"], rel=1e-12)
+
+
+def test_typed_single_slice_joint_cell_bit_exact():  # H3
+    """The same jointly-autoscaled cell run through the *typed* path — a
+    one-type pool of unit-cost unit-speed slices, typed fleet, typed
+    factories — lands on the identical committed number: the typed
+    machinery is a strict generalization, not a reimplementation."""
+    from benchmarks.joint_budget import N_ADAPTERS, phase_shift_workload
+    from repro.configs import get_config
+    from repro.serving.prefill import PrefillConfig
+    from repro.serving.simulator import run_elastic_study
+
+    accel = SliceType("accel")
+    stats = run_elastic_study(
+        get_config("mistral-7b"), "jd", N_ADAPTERS,
+        phase_shift_workload(alpha=1.0)[:1000],
+        FleetConfig(n_replicas=2, policy="cluster_affinity"),
+        prefill_cfg=PrefillConfig(n_workers=2),
+        slo=SLOConfig(ttft_p95=0.4),
+        budget_cfg=BudgetConfig(slice_types=(accel,), total_cost_units=6),
+        joint_cfg=JointAutoscalerConfig(decision_interval=0.05,
+                                        cooldown_intervals=0),
+        decode_slice_types=[accel, accel], prefill_slice_type=accel)
+    with open(BASELINES / "BENCH_joint.json") as f:
+        baseline = json.load(f)
+    assert stats.total.throughput_rps == pytest.approx(
+        baseline["joint_zipf1.0_b6_fab50g_auto"]["rps"], rel=1e-12)
+
+
+def test_adaptive_joint_axis_cell_bit_exact_with_baseline():  # H3
+    """PR 6's compression-axis cell (joint budget + adaptive ladder) is
+    untouched by the typed-slice refactor."""
+    from benchmarks.adaptive_compression import (adaptive_workload,
+                                                 joint_axis_cell)
+    from repro.configs import get_config
+
+    stats = joint_axis_cell(get_config("mistral-7b"), adaptive_workload(4.0),
+                            2e9)
+    with open(BASELINES / "BENCH_adaptive.json") as f:
+        baseline = json.load(f)
+    assert stats.total.throughput_rps == pytest.approx(
+        baseline["adaptive_joint_axis_b6_bw2g"]["rps"], rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# H4: the router's rank-efficiency mirror of the SGMV tile cost model
+# ---------------------------------------------------------------------------
+
+
+def test_router_rank_efficiency_mirrors_sgmv_kernel_model():  # H4
+    sgmv = pytest.importorskip("repro.kernels.sgmv")
+    for tile in (1, 4, 8, 16, 32):
+        for rank in range(1, 66):
+            assert rank_efficiency(rank, tile) == \
+                sgmv.sgmv_rank_efficiency(rank, tile)
+            cost = sgmv.sgmv_tile_cost(rank, tile)
+            assert cost % tile == 0 and rank <= cost < rank + tile
+
+
+def test_rank_efficiency_properties():  # H4
+    assert rank_efficiency(8, 8) == 1.0      # tile multiple: no padding
+    assert rank_efficiency(16, 8) == 1.0
+    assert rank_efficiency(4, 8) == 0.5      # half the tile streams zeros
+    assert rank_efficiency(1, 32) == 1 / 32  # worst case: 1/tile
+    assert rank_efficiency(5, 1) == 1.0      # tile 1: unpadded identity
+    with pytest.raises(ValueError):
+        rank_efficiency(0)
+    with pytest.raises(ValueError):
+        rank_efficiency(8, 0)
+
+
+# ---------------------------------------------------------------------------
+# slice-scaled hardware and the per-rank adapter byte model
+# ---------------------------------------------------------------------------
+
+
+def test_for_slice_scales_rooflines():
+    hw = ServingHardware()
+    fast = hw.for_slice(SliceType("x", prefill_speed=2.0, decode_speed=3.0,
+                                  hbm_bytes=1e9))
+    assert fast.peak_flops == hw.peak_flops * 2.0
+    assert fast.hbm_bw == hw.hbm_bw * 3.0
+    assert fast.hbm_bytes == 1e9
+    inherit = hw.for_slice(SliceType("y"))
+    assert inherit.hbm_bytes == hw.hbm_bytes
+    assert hw.for_slice(None) is hw          # untyped: identity, bit-exact
+
+
+def _fp(lora_bytes=1600, lora_rank=16):
+    return ModelFootprint(n_active_params=1, weight_bytes=0,
+                          lora_bytes_per_adapter=lora_bytes,
+                          jd_shared_bytes_per_cluster=0,
+                          jd_sigma_bytes_per_adapter=0,
+                          kv_bytes_per_token=1, lora_rank=lora_rank)
+
+
+def test_lora_adapter_bytes_scale_with_padded_rank():
+    hw = ServingHardware()
+    ex = CostModelExecutor(hw, _fp(), "lora", rank_of={1: 4, 2: 48},
+                           slice_type=SliceType("w", sgmv_tile_rank=8))
+    assert ex.lora_adapter_bytes(1) == 1600 * 8 // 16    # rank 4 -> tile 8
+    assert ex.lora_adapter_bytes(2) == 1600 * 48 // 16   # 48 = 6 tiles
+    assert ex.lora_adapter_bytes(99) == 1600             # unmapped: fp rank
+    # no rank map: legacy constant bytes regardless of slice (H3)
+    legacy = CostModelExecutor(hw, _fp(), "lora",
+                               slice_type=SliceType("w", sgmv_tile_rank=8))
+    assert legacy.lora_adapter_bytes(1) == 1600
+    # rank map but no slice: unpadded (tile 1) scaling
+    flat = CostModelExecutor(hw, _fp(), "lora", rank_of={1: 4})
+    assert flat.lora_adapter_bytes(1) == 1600 * 4 // 16
+
+
+# ---------------------------------------------------------------------------
+# autoscaler slice-type choice (satellite)
+# ---------------------------------------------------------------------------
+
+
+def _joint_typed(total=8, types=(BIG, SMALL), **kw):
+    budget = HardwareBudget(BudgetConfig(slice_types=tuple(types),
+                                         total_cost_units=total))
+    cfg = JointAutoscalerConfig(cooldown_intervals=0, **kw)
+    return JointAutoscaler(cfg, SLOConfig(ttft_p95=1.0), budget), budget
+
+
+def test_pick_slice_prefill_prefers_compute_decode_prefers_bw_per_unit():
+    a, _ = _joint_typed(total=8)
+    # prefill: fastest compute first (big: 4x), affordable at 8 free
+    assert a.pick_slice("prefill").name == "big"
+    # decode: bandwidth per cost unit (small 1.0/1 beats big 2.0/4)
+    assert a.pick_slice("decode").name == "small"
+
+
+def test_pick_slice_falls_back_to_cheapest_when_pool_tight():
+    a, b = _joint_typed(total=5)
+    b.allocate("prefill", BIG)               # 1 unit free: big unaffordable
+    assert a.pick_slice("prefill").name == "small"
+    # extra_units from a would-be trade makes big affordable again
+    assert a.pick_slice("prefill", extra_units=3).name == "big"
+    b.allocate("decode", SMALL)              # 0 free: nothing affordable
+    assert a.pick_slice("prefill").name == "small"   # cheapest fallback
+    assert a.pick_slice("decode") is not None
+
+
+def test_untyped_pick_slice_is_none():  # H3
+    budget = HardwareBudget(BudgetConfig(total_accelerators=4))
+    a = JointAutoscaler(JointAutoscalerConfig(cooldown_intervals=0),
+                        SLOConfig(ttft_p95=1.0), budget)
+    assert a.pick_slice("prefill") is None
+    assert a.pick_slice("decode") is None
+
+
+def test_decision_records_chosen_slice_per_phase():
+    # prefill-heavy phase: scale-up from the free pool picks the big slice
+    a, b = _joint_typed(total=12)
+    b.allocate("prefill", BIG)
+    b.allocate("decode", SMALL)
+    d = a.decide(1.0, [0.6] * 20, [], [0.05] * 20, [0.9] * 20,
+                 n_prefill=1, n_decode=1,
+                 prefill_backlog=0, decode_backlog=0)
+    assert d == (1, 0)
+    assert a.history[-1].prefill_slice == "big"
+    assert a.history[-1].decode_slice is None
+    # decode-heavy phase: the decode grow picks the small slice
+    a2, b2 = _joint_typed(total=12)
+    b2.allocate("prefill", BIG)
+    b2.allocate("decode", SMALL)
+    d2 = a2.decide(1.0, [0.8] * 20, [], [0.7] * 20, [0.05] * 20,
+                   n_prefill=1, n_decode=1,
+                   prefill_backlog=0, decode_backlog=0)
+    assert d2 == (0, 1)
+    assert a2.history[-1].decode_slice == "small"
+
+
+def test_typed_trade_prices_donor_units_not_replica_counts():
+    # pool full: 1 big prefill + 4 small decode on 8 units; prefill
+    # drowning.  Retiring one small decode frees 1 unit — not enough to
+    # fund the small prefill the picker would then choose?  It IS enough
+    # (small costs 1), so the trade fires and is priced in units.
+    a, b = _joint_typed(total=8)
+    b.allocate("prefill", BIG)
+    for _ in range(4):
+        b.allocate("decode", SMALL)
+    d = a.decide(1.0, [0.6] * 20, [], [0.05] * 20, [0.9] * 20,
+                 n_prefill=1, n_decode=4,
+                 prefill_backlog=9, decode_backlog=1,
+                 retire_decode_units=1)
+    assert d == (1, -1)
+    assert a.history[-1].prefill_slice == "small"
+    # same shape but the receiver needs more units than the donor frees:
+    # 2-unit-footprint prefill slices only — one freed decode unit cannot
+    # fund them, so no trade (it would crash the driver's allocate)
+    wide = SliceType("wide", cost_units=2, prefill_slices=1, decode_slices=1)
+    a2, b2 = _joint_typed(total=8, types=(wide,))
+    b2.allocate("prefill", wide)
+    for _ in range(3):
+        b2.allocate("decode", wide)
+    assert a2.decide(1.0, [0.6] * 20, [], [0.05] * 20, [0.9] * 20,
+                     n_prefill=1, n_decode=3,
+                     prefill_backlog=9, decode_backlog=1,
+                     retire_decode_units=1) == (0, 0)
+    # donor actually frees its full 2-unit slice: trade fires
+    assert a2.decide(2.0, [0.6] * 20, [], [0.05] * 20, [0.9] * 20,
+                     n_prefill=1, n_decode=3,
+                     prefill_backlog=9, decode_backlog=1,
+                     retire_decode_units=2) == (1, -1)
+
+
+# ---------------------------------------------------------------------------
+# rank-aware routing (tentpole) + peer-mean load seeding (satellite)
+# ---------------------------------------------------------------------------
+
+
+class FixedCostExecutor:
+    """Hand-computable executor: prefill 1s, decode step 0.5s."""
+
+    def adapter_bytes(self, aid):
+        return 1
+
+    def shared_bytes(self):
+        return 0
+
+    def decode_step_time(self, batch):
+        return 0.5 if batch else 0.0
+
+    def prefill_time(self, req):
+        return 1.0
+
+
+def _engine(slice_type=None, max_batch=8):
+    eng = ServingEngine(
+        EngineConfig(scheduler=SchedulerConfig(max_batch=max_batch),
+                     adapter_budget_bytes=1e9),
+        FixedCostExecutor(), slice_type=slice_type)
+    eng.cache = AdapterCache(CacheConfig(1e9, DMAModel(bandwidth=1e30,
+                                                       latency=0.0)))
+    return eng
+
+
+def _reqs(adapters, start_rid=0):
+    return [Request(rid=start_rid + i, adapter_id=a, prompt_len=8,
+                    max_new_tokens=2, arrival_time=0.0)
+            for i, a in enumerate(adapters)]
+
+
+def test_rank_aware_routes_skinny_ranks_to_narrow_tiles():
+    """Equal load, one wide-tile fast replica and one narrow-tile slow
+    one: a rank-4 adapter scores 2.0 * 4/32 = 0.25 on the wide slice but
+    1.0 * 4/8 = 0.5 on the narrow one -> first sighting goes narrow."""
+    f = Fleet(FleetConfig(n_replicas=2, policy="adapter_affinity",
+                          rank_aware=True),
+              [_engine(BIG), _engine(SMALL)], rank_of={7: 4, 8: 64})
+    f.submit(_reqs([7]))
+    assert f.assignments[0] == 1             # narrow tile wins rank 4
+    # rank 64 = 2 full tiles of 32: wide slice's speed dominates
+    # (2.0 * 1.0 vs 1.0 * 1.0)
+    f2 = Fleet(FleetConfig(n_replicas=2, policy="adapter_affinity",
+                           rank_aware=True),
+               [_engine(BIG), _engine(SMALL)], rank_of={7: 4, 8: 64})
+    f2.submit(_reqs([8]))
+    assert f2.assignments[0] == 0
+
+
+def test_rank_aware_unmapped_adapter_uses_legacy_tiebreak():  # H3
+    f = Fleet(FleetConfig(n_replicas=2, policy="adapter_affinity",
+                          rank_aware=True),
+              [_engine(BIG), _engine(SMALL)], rank_of={7: 4})
+    f.submit(_reqs([3]))                     # not in rank_of
+    assert f.assignments[0] == 0             # lowest index, legacy rule
+
+
+def test_rank_aware_requires_rank_map():
+    with pytest.raises(ValueError, match="rank_of"):
+        Fleet(FleetConfig(n_replicas=2, rank_aware=True),
+              [_engine(), _engine()])
+
+
+def test_routed_load_seed_validated():
+    with pytest.raises(ValueError, match="routed_load_seed"):
+        Fleet(FleetConfig(n_replicas=1, routed_load_seed="median"),
+              [_engine()])
+
+
+def test_peer_mean_seed_is_mean_of_active_peers():
+    f = Fleet(FleetConfig(n_replicas=2, policy="adapter_affinity",
+                          routed_load_seed="peer_mean"),
+              [_engine(), _engine()])
+    f.submit(_reqs([0, 1] * 4))              # both replicas loaded equally
+    loads = [f._routed_load[0], f._routed_load[1]]
+    assert min(loads) > 0
+    k = f.add_replica(_engine())
+    assert f._routed_load[k] == pytest.approx(sum(loads) / 2)
+    # legacy default seeds at zero (bit-exact with every baseline)  # H3
+    fz = Fleet(FleetConfig(n_replicas=2, policy="adapter_affinity"),
+               [_engine(), _engine()])
+    fz.submit(_reqs([0, 1] * 4))
+    kz = fz.add_replica(_engine())
+    assert fz._routed_load[kz] == 0.0
+
+
+def test_peer_mean_newcomer_gets_work_without_hotspot():
+    """Mid-run attach under adapter_affinity: a zero-seeded newcomer
+    looks infinitely light, so the very next established-adapter request
+    spills onto it (hot spot).  Peer-mean seeding keeps warm adapters
+    sticky AND still hands the newcomer work within one window of
+    arrivals, with no least_outstanding workaround."""
+    def run(seed):
+        f = Fleet(FleetConfig(n_replicas=2, policy="adapter_affinity",
+                              routed_load_seed=seed),
+                  [_engine(), _engine()])
+        f.submit(_reqs([0, 1] * 6))
+        k = f.add_replica(_engine())
+        f.submit(_reqs([0, 1] * 6, start_rid=12))   # one window of traffic
+        routed_to_k = [r for r, i in f.assignments.items()
+                       if r >= 12 and i == k]
+        return k, routed_to_k
+
+    k, hot = run("zero")
+    assert len(hot) > 6      # zero seed: the newcomer absorbs the window
+    k, fair = run("peer_mean")
+    assert 1 <= len(fair) <= 6   # gets work, established homes keep most
+
+
+# ---------------------------------------------------------------------------
+# real-decode calibration constants (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_real_decode_constants_match_committed_bench():
+    with open(BASELINES / "BENCH_real.json") as f:
+        derived = json.load(f)["derived"]
+    assert REAL_DECODE_STEP_OVERHEAD_S == derived["step_overhead_s"]
+    assert REAL_DECODE_PER_SLOT_S == derived["per_slot_s"]
+
+
+def test_real_calibrated_hardware_profile():
+    hw = ServingHardware.real_calibrated()
+    assert hw.step_overhead == REAL_DECODE_STEP_OVERHEAD_S
+    assert ServingHardware.real_calibrated(
+        step_overhead=1e-3).step_overhead == 1e-3
+    # live simulated baselines keep the legacy default (bit-exactness)
+    assert ServingHardware().step_overhead == 3e-4  # H3
+
+
+# ---------------------------------------------------------------------------
+# typed fleet construction plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_build_fleet_validates_slice_list_length():
+    from repro.configs import get_config
+    from repro.serving.simulator import (build_fleet, memory_matched_setup)
+
+    cfg = get_config("mistral-7b")
+    setting, cluster_of, budget = memory_matched_setup(cfg, 8, 0)
+    with pytest.raises(ValueError, match="decode_slice_types"):
+        build_fleet(cfg, "lora", 8, budget,
+                    FleetConfig(n_replicas=2), ServingHardware(),
+                    cluster_of, setting, decode_slice_types=[SMALL])
+
+
+def test_build_engine_slice_scaling_and_slice_pool():
+    from repro.configs import get_config
+    from repro.serving.simulator import (build_engine, memory_matched_setup,
+                                         slice_pool_bytes, serving_footprint)
+
+    cfg = get_config("mistral-7b")
+    setting, cluster_of, budget = memory_matched_setup(cfg, 8, 0)
+    hw = ServingHardware()
+    st = SliceType("half", hbm_bytes=hw.hbm_bytes / 2, decode_speed=2.0)
+    eng = build_engine(cfg, "lora", 8, budget, hw, cluster_of, setting,
+                      pool_bytes="slice", slice_type=st)
+    fp = serving_footprint(cfg, "lora", 8, setting)
+    assert eng.slice_type is st
+    assert eng.executor.hw.hbm_bw == hw.hbm_bw * 2.0
+    expect = slice_pool_bytes(fp, hw.for_slice(st))
+    assert eng.pool.cfg.total_bytes == pytest.approx(expect, rel=0.01)
+    # untyped: no scaling, identical executor hardware (H3)
+    base = build_engine(cfg, "lora", 8, budget, hw, cluster_of, setting)
+    assert base.slice_type is None and base.executor.hw is hw
